@@ -1,0 +1,38 @@
+"""Paper Fig. 3: per-candidate latency breakdown (edge + upload + cloud).
+
+One bar per candidate partition of AlexNet at the paper's 250 KB/s;
+marks the best (and fastest) cut like the paper's pentagrams."""
+from __future__ import annotations
+
+from repro.core.autotune import AutoTuner
+from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel,
+                                  EDGE_TX2_CLASS)
+from repro.models import legacy
+
+
+def run(print_fn=print, *, kbps: float = 250.0) -> list:
+    g = legacy.alexnet_graph()
+    tuner = AutoTuner(g, EDGE_TX2_CLASS, CLOUD_TITANXP_CLASS)
+    ch = Channel.from_kbps(kbps)
+    best, perfs = tuner.tune(ch)
+    rows = []
+    print_fn(f"AlexNet @ {kbps:g} KB/s  (* = best/fastest cut)")
+    print_fn(f"{'cut':>8} {'edge(s)':>8} {'upload(s)':>10} {'cloud(s)':>9} "
+             f"{'total(s)':>9}  bar")
+    scale = 40.0 / max(p.total_s for p in perfs)
+    for p in perfs:
+        mark = "*" if p.point == best.point else " "
+        e = int(p.edge_time_s * scale)
+        u = int(p.upload_time_s * scale)
+        c = int(p.cloud_time_s * scale)
+        bar = "E" * e + "U" * u + "C" * c
+        print_fn(f"{mark}{p.point:>7} {p.edge_time_s:>8.3f} "
+                 f"{p.upload_time_s:>10.3f} {p.cloud_time_s:>9.3f} "
+                 f"{p.total_s:>9.3f}  {bar}")
+        rows.append((p.point, p.edge_time_s, p.upload_time_s, p.cloud_time_s,
+                     p.total_s, p.point == best.point))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

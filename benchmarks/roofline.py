@@ -1,0 +1,45 @@
+"""§Roofline: render the per-(arch × shape × mesh) roofline table from the
+dry-run artifacts (artifacts/dryrun/*.json).
+
+Terms (per device, seconds):
+  compute    = HLO_FLOPs / 197e12          (bf16 peak per v5e chip)
+  memory     = HLO_bytes / 819e9           (HBM)
+  collective = wire_bytes / 50e9           (ICI per link)
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path("artifacts/dryrun")
+
+
+def load(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def run(print_fn=print, *, mesh: str = "16x16") -> list[dict]:
+    recs = load(mesh)
+    if not recs:
+        print_fn(f"(no dry-run artifacts for mesh {mesh} — run "
+                 f"`python -m repro.launch.dryrun` first)")
+        return []
+    print_fn(f"{'arch':>20} {'shape':>12} {'kind':>8} {'compute_s':>10} "
+             f"{'memory_s':>10} {'collect_s':>10} {'dominant':>10} "
+             f"{'useful':>7} {'peak GiB':>9}")
+    for r in recs:
+        rl = r["roofline"]
+        print_fn(f"{r['arch']:>20} {r['shape']:>12} {r['kind']:>8} "
+                 f"{rl['compute_s']:>10.4f} {rl['memory_s']:>10.4f} "
+                 f"{rl['collective_s']:>10.4f} {rl['dominant']:>10} "
+                 f"{min(r['useful_flop_ratio'], 9.99):>7.2f} "
+                 f"{r['memory_analysis']['temp_bytes'] / 2**30:>9.2f}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints human tables per benchmark, then a machine-readable
+``name,us_per_call,derived`` CSV summary at the end.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig3_breakdown, kernel_bench, roofline,
+                            table3_partition, table12_transmission)
+
+    csv_rows = []
+
+    def section(name, fn, derived_fn):
+        print(f"\n=== {name} " + "=" * max(1, 66 - len(name)))
+        t0 = time.perf_counter()
+        result = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        csv_rows.append((name, us, derived_fn(result)))
+        return result
+
+    section("table1_2_transmission", table12_transmission.run,
+            lambda r: f"inception_rows={len(r['Table1'])};"
+                      f"residual_rows={len(r['Table2'])}")
+    section("table3_partition", table3_partition.run,
+            lambda r: ";".join(f"{k}:{v['best']}@{v['speedup']:.2f}x"
+                               for k, v in r.items()))
+    section("fig3_breakdown", fig3_breakdown.run,
+            lambda r: f"candidates={len(r)};"
+                      f"best={[x[0] for x in r if x[5]][0]}")
+    section("kernel_int8_matmul", kernel_bench.run,
+            lambda r: f"int8_vs_fp32={r['t_int8_us'] / r['t_f32_us']:.2f};"
+                      f"rel_err={r['rel_err']:.4f}")
+    section("roofline_16x16", lambda: roofline.run(mesh="16x16"),
+            lambda r: f"cells={len(r)}")
+    section("roofline_multipod", lambda: roofline.run(mesh="multipod"),
+            lambda r: f"cells={len(r)}")
+
+    from benchmarks import optimized_decode
+    section("optimized_decode_serving", optimized_decode.summarize,
+            lambda r: f"cells={len(r)}")
+
+    print("\n=== CSV summary " + "=" * 52)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

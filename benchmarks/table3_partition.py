@@ -1,0 +1,63 @@
+"""Paper Table 3: best partition per network per wireless environment.
+
+AlexNet / VGG16 / ResNet-18 / GoogLeNet at the paper's measured
+bandwidths (250 / 240 / 70 / 180 KB/s).  Columns mirror the paper:
+best cut, end-to-end time, speed-up vs cloud-only, edge model download,
+storage reduction.  Our devices are roofline models calibrated to
+TX2/TITAN-class hardware (DESIGN.md §3), so cut names are expected to
+match in *character* (late-conv / early-fc at low bandwidth), not
+necessarily layer-for-layer.
+"""
+from __future__ import annotations
+
+from repro.core.autotune import AutoTuner
+from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel,
+                                  EDGE_TX2_CLASS)
+from repro.models import legacy, resnet
+
+PAPER = {  # network -> (bandwidth KB/s, paper best cut, paper speedup)
+    "alexnet": (250, "conv5", "1.7x"),
+    "vgg16": (240, "conv1_2", "<1x"),
+    "resnet-18": (70, "res4a", "1.13x"),
+    "googlenet": (180, "conv2", "<1x"),
+}
+
+
+def _graphs():
+    return {
+        "alexnet": legacy.alexnet_graph(),
+        "vgg16": legacy.vgg16_graph(),
+        "resnet-18": resnet.make_graph(
+            resnet.ResNetConfig(name="resnet-18", depths=(2, 2, 2, 2),
+                                bottleneck=False), batch=1),
+        "googlenet": legacy.googlenet_graph(),
+    }
+
+
+def run(print_fn=print) -> dict:
+    out = {}
+    hdr = (f"{'network':>10} {'KB/s':>5} {'best cut':>12} {'time(s)':>8} "
+           f"{'speedup':>8} {'download(KB)':>13} {'storage red':>12} "
+           f"{'paper cut':>10} {'paper sp':>8}")
+    print_fn(hdr)
+    for name, g in _graphs().items():
+        kbps, paper_cut, paper_sp = PAPER[name]
+        tuner = AutoTuner(g, EDGE_TX2_CLASS, CLOUD_TITANXP_CLASS)
+        ch = Channel.from_kbps(kbps)
+        best, perfs = tuner.tune(ch)
+        sp = tuner.speedup_vs_cloud_only(ch)
+        print_fn(f"{name:>10} {kbps:>5} {best.point:>12} "
+                 f"{best.total_s:>8.3f} {sp:>7.2f}x "
+                 f"{best.edge_model_bytes / 1e3:>13.1f} "
+                 f"{best.storage_reduction:>11.1%} "
+                 f"{paper_cut:>10} {paper_sp:>8}")
+        out[name] = {"best": best.point, "total_s": best.total_s,
+                     "speedup": sp,
+                     "download_kb": best.edge_model_bytes / 1e3,
+                     "storage_reduction": best.storage_reduction,
+                     "n_candidates": len(perfs)}
+    return out
+
+
+if __name__ == "__main__":
+    run()

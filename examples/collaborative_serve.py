@@ -1,0 +1,74 @@
+"""End-to-end driver: serve a small LM with batched requests, cloud-only
+vs cloud-edge collaborative at the auto-tuned partition point.
+
+This is the paper's deployment story on the LM family: Algorithm 1 picks
+the cut from the layer graph + device/channel models, then the
+collaborative engine runs the INT8 edge prefix and ships one quantized
+boundary blob per forward.
+
+Run:  PYTHONPATH=src python examples/collaborative_serve.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.autotune import AutoTuner
+from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel,
+                                  EDGE_TX2_CLASS)
+from repro.models.transformer import LMConfig, init_lm, make_graph
+from repro.serve.engine import CollaborativeServingEngine, ServingEngine
+
+CFG = LMConfig(name="edge-lm-25m", n_layers=6, d_model=256, n_heads=8,
+               n_kv=4, d_ff=1024, vocab=2048, max_seq=128, remat=False)
+
+
+def main():
+    print(f"model: {CFG.name} ({CFG.param_count() / 1e6:.1f}M params)")
+    params = init_lm(jax.random.PRNGKey(0), CFG)
+
+    # --- Algorithm 1: choose the cut for this environment ---------------
+    graph = make_graph(CFG, batch=1, seq=32)
+    channel = Channel.from_kbps(250, rtt_ms=20)
+    tuner = AutoTuner(graph, EDGE_TX2_CLASS, CLOUD_TITANXP_CLASS)
+    best, perfs = tuner.tune(channel)
+    print(f"auto-tuned cut @250KB/s: {best.point} "
+          f"(upload {best.transmit_bytes / 1e3:.1f}KB, "
+          f"edge download {best.edge_model_bytes / 1e3:.0f}KB, "
+          f"storage reduction {best.storage_reduction:.1%})")
+    cut_layer = 0
+    if best.point.startswith("blk"):
+        cut_layer = int(best.point.split("/")[0][3:])
+
+    # --- batched serving -------------------------------------------------
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, CFG.vocab, 16).astype(np.int32)
+               for _ in range(8)]
+
+    cloud = ServingEngine(params, CFG, max_batch=4, max_len=64)
+    t0 = time.perf_counter()
+    ref = cloud.generate(prompts, max_new_tokens=8)
+    t_cloud = time.perf_counter() - t0
+    print(f"\ncloud-only: {len(prompts)} requests x 8 tokens in "
+          f"{t_cloud:.2f}s  ({cloud.stats.decode_steps} decode steps)")
+
+    collab = CollaborativeServingEngine(params, CFG, cut_layer=cut_layer,
+                                        channel=channel, max_len=64)
+    t0 = time.perf_counter()
+    got = collab.generate(prompts, max_new_tokens=8)
+    t_collab = time.perf_counter() - t0
+    agree = np.mean([a == b for r, g in zip(ref, got)
+                     for a, b in zip(r, g)])
+    print(f"collaborative (cut after block {cut_layer}): {t_collab:.2f}s, "
+          f"transmitted {collab.stats.transmitted_bytes / 1e3:.1f}KB int8 "
+          f"(simulated wire time {collab.stats.channel_latency_s:.2f}s)")
+    print(f"token agreement with cloud-only greedy: {agree:.1%} "
+          f"(INT8 edge noise can flip near-ties)")
+    raw_bytes = sum(p.size * 4 for p in prompts) * 8
+    print(f"\nwire traffic vs shipping fp32 activations every step: "
+          f"{collab.stats.transmitted_bytes / 1e3:.0f}KB int8 — the paper's "
+          f"Eq.(1) boundary quantization at work")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Architecture registry: the 10 assigned archs + the paper's 4 baselines.
+
+Each arch config module defines ``FULL`` (the exact published numbers) and
+``SMOKE`` (a reduced same-family config for CPU tests).  The registry maps
+``--arch <id>`` to family, configs, and the family's shape set; and
+``input_specs(arch, shape)`` builds the ShapeDtypeStruct stand-ins every
+dry-run cell lowers against (no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ArchSpec", "ShapeSpec", "REGISTRY", "get_arch", "list_archs",
+           "list_cells", "input_specs", "LM_SHAPES", "DIFFUSION_SHAPES",
+           "VISION_SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                    # train | prefill | decode | denoise | infer
+    # LM fields
+    seq_len: int = 0
+    global_batch: int = 0
+    # diffusion fields
+    img_res: int = 0
+    steps: int = 0
+    # vision fields (img_res + global_batch reused)
+
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", seq_len=4096,
+                          global_batch=256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", seq_len=32768,
+                             global_batch=32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", seq_len=32768,
+                            global_batch=128),
+    "long_500k": ShapeSpec("long_500k", "decode", seq_len=524288,
+                           global_batch=1),
+}
+
+DIFFUSION_SHAPES = {
+    "train_256": ShapeSpec("train_256", "train", img_res=256,
+                           global_batch=256, steps=1000),
+    "gen_1024": ShapeSpec("gen_1024", "denoise", img_res=1024,
+                          global_batch=4, steps=50),
+    "gen_fast": ShapeSpec("gen_fast", "denoise", img_res=512,
+                          global_batch=16, steps=4),
+    "train_1024": ShapeSpec("train_1024", "train", img_res=1024,
+                            global_batch=32, steps=1000),
+}
+
+VISION_SHAPES = {
+    "cls_224": ShapeSpec("cls_224", "train", img_res=224, global_batch=256),
+    "cls_384": ShapeSpec("cls_384", "train", img_res=384, global_batch=64),
+    "serve_b1": ShapeSpec("serve_b1", "infer", img_res=224, global_batch=1),
+    "serve_b128": ShapeSpec("serve_b128", "infer", img_res=224,
+                            global_batch=128),
+}
+
+_FAMILY_SHAPES = {"lm": LM_SHAPES, "diffusion": DIFFUSION_SHAPES,
+                  "vision": VISION_SHAPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                  # lm | diffusion | vision
+    full: Any
+    smoke: Any
+    source: str = ""
+    assigned: bool = True        # False for the paper's own baselines
+
+    @property
+    def shapes(self) -> Dict[str, ShapeSpec]:
+        return _FAMILY_SHAPES.get(self.family, {})
+
+
+def _build_registry() -> Dict[str, ArchSpec]:
+    from repro.configs import (alexnet, deepseek_7b, deit_b, flux_dev,
+                               googlenet, grok1_314b, phi3_medium_14b,
+                               qwen3_moe_30b_a3b, resnet18, resnet152,
+                               unet_sd15, vgg16, vit_h14, vit_s16)
+    specs = [
+        phi3_medium_14b.SPEC, deepseek_7b.SPEC, qwen3_moe_30b_a3b.SPEC,
+        grok1_314b.SPEC, flux_dev.SPEC, unet_sd15.SPEC, deit_b.SPEC,
+        vit_s16.SPEC, vit_h14.SPEC, resnet152.SPEC,
+        alexnet.SPEC, vgg16.SPEC, resnet18.SPEC, googlenet.SPEC,
+    ]
+    return {s.arch_id: s for s in specs}
+
+
+_REGISTRY: Optional[Dict[str, ArchSpec]] = None
+
+
+def REGISTRY() -> Dict[str, ArchSpec]:
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = _build_registry()
+    return _REGISTRY
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    reg = REGISTRY()
+    if arch_id not in reg:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(reg)}")
+    return reg[arch_id]
+
+
+def list_archs(*, assigned_only: bool = False) -> List[str]:
+    return [a for a, s in REGISTRY().items()
+            if s.assigned or not assigned_only]
+
+
+def list_cells() -> List[Tuple[str, str]]:
+    """The 40 assigned (arch × shape) dry-run cells."""
+    cells = []
+    for a in list_archs(assigned_only=True):
+        for sh in get_arch(a).shapes:
+            cells.append((a, sh))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, shannon/kernels pattern)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch_id: str, shape_name: str, *,
+                smoke: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for the (arch, shape) step function."""
+    spec = get_arch(arch_id)
+    cfg = spec.smoke if smoke else spec.full
+    sh = spec.shapes[shape_name]
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if spec.family == "lm":
+        b, s = sh.global_batch, sh.seq_len
+        if sh.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if sh.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        # decode: one new token against a seq_len KV cache
+        return {"token": jax.ShapeDtypeStruct((b,), i32),
+                "cache_index": jax.ShapeDtypeStruct((), i32)}
+
+    if spec.family == "diffusion":
+        b, r = sh.global_batch, sh.img_res
+        if cfg.name.startswith("flux") or type(cfg).__name__ == "MMDiTConfig":
+            n_img = (r // 16) ** 2
+            lat_sp = jax.ShapeDtypeStruct((b, n_img, cfg.in_ch), f32)
+            base = {"latent": lat_sp,
+                    "txt": jax.ShapeDtypeStruct((b, cfg.txt_len, cfg.txt_dim),
+                                                f32),
+                    "vec": jax.ShapeDtypeStruct((b, cfg.vec_dim), f32),
+                    "t": jax.ShapeDtypeStruct((b,), f32)}
+            if sh.kind == "train":          # deterministic distributed step
+                base["noise"] = lat_sp
+            return base
+        lat = r // 8
+        lat_sp = jax.ShapeDtypeStruct((b, lat, lat, cfg.in_ch), f32)
+        base = {"latent": lat_sp,
+                "ctx": jax.ShapeDtypeStruct((b, cfg.ctx_len, cfg.ctx_dim),
+                                            f32),
+                "t": jax.ShapeDtypeStruct((b,), i32)}
+        if sh.kind == "train":
+            base["noise"] = lat_sp
+        return base
+
+    # vision
+    b, r = sh.global_batch, sh.img_res
+    base = {"image": jax.ShapeDtypeStruct((b, r, r, 3), f32)}
+    if sh.kind == "train":
+        base["label"] = jax.ShapeDtypeStruct((b,), i32)
+    return base

@@ -1,0 +1,15 @@
+"""alexnet — paper baseline (Table 3 subject, best cut conv5).
+Single-tower (ungrouped) variant; see DESIGN.md."""
+from repro.configs import ArchSpec
+
+
+class AlexNetConfig:
+    name = "alexnet"
+    img_res = 227
+
+
+FULL = AlexNetConfig()
+SMOKE = AlexNetConfig()
+
+SPEC = ArchSpec(arch_id="alexnet", family="vision", full=FULL, smoke=SMOKE,
+                source="arXiv:1404.5997-era; paper", assigned=False)

@@ -1,0 +1,14 @@
+"""googlenet — paper baseline (Table 3 subject, best cut conv2)."""
+from repro.configs import ArchSpec
+
+
+class GoogLeNetConfig:
+    name = "googlenet"
+    img_res = 224
+
+
+FULL = GoogLeNetConfig()
+SMOKE = GoogLeNetConfig()
+
+SPEC = ArchSpec(arch_id="googlenet", family="vision", full=FULL, smoke=SMOKE,
+                source="arXiv:1409.4842; paper", assigned=False)

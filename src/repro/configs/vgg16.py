@@ -1,0 +1,14 @@
+"""vgg16 — paper baseline (Table 3 subject, best cut conv1_2)."""
+from repro.configs import ArchSpec
+
+
+class VGG16Config:
+    name = "vgg16"
+    img_res = 224
+
+
+FULL = VGG16Config()
+SMOKE = VGG16Config()
+
+SPEC = ArchSpec(arch_id="vgg16", family="vision", full=FULL, smoke=SMOKE,
+                source="arXiv:1409.1556; paper", assigned=False)

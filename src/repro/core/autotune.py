@@ -1,0 +1,125 @@
+"""Auto-tuning partition — the paper's Algorithm 1.
+
+For every candidate cut L_i (from §2.2's rules):
+  Net_edge  = Net.Split(First, L_i)   quantized to INT8
+  Net_cloud = Net.Split(L_i+1, Last)  kept at FP32
+  PredictPerformance(Engine_edge, Engine_cloud)   — from off-line profiles
+and finally the best partition for the current environment (bandwidth)
+is returned.  ``p_best`` minimizes end-to-end latency by default; the
+paper also reports the "fastest" vs "best" distinction (best = fastest
+subject to edge-storage/accuracy constraints) which we expose through
+``constraints``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.costmodel import (Channel, DeviceModel, Profile,
+                                  layer_time, subgraph_time)
+from repro.core.graph import LayerGraph
+from repro.core.partition import (CandidatePoint, candidate_partition_points,
+                                  merge_non_parametric)
+
+__all__ = ["PartitionPerf", "AutoTuner", "auto_tune"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPerf:
+    """The ``(L_i, info)`` record of Algorithm 1, line 8."""
+    point: str
+    edge_time_s: float
+    upload_time_s: float
+    cloud_time_s: float
+    transmit_bytes: float
+    edge_model_bytes: float          # quantized prefix download (paper Table 3)
+    storage_reduction: float         # vs full fp32 model on device
+    edge_flops: float
+    n_blobs: int
+
+    @property
+    def total_s(self) -> float:
+        return self.edge_time_s + self.upload_time_s + self.cloud_time_s
+
+
+class AutoTuner:
+    def __init__(self, graph: LayerGraph, edge: DeviceModel,
+                 cloud: DeviceModel, *,
+                 edge_profile: Optional[Profile] = None,
+                 cloud_profile: Optional[Profile] = None,
+                 max_blobs: int = 1,
+                 loop_steps: int = 1,
+                 quant_bits: int = 8):
+        self.graph = graph
+        self.merged = merge_non_parametric(graph)
+        self.edge = edge
+        self.cloud = cloud
+        self.edge_profile = edge_profile
+        self.cloud_profile = cloud_profile
+        self.max_blobs = max_blobs
+        self.loop_steps = loop_steps      # diffusion: transmissions per call
+        self.quant_bits = quant_bits
+        self.candidates: List[CandidatePoint] = candidate_partition_points(
+            graph, max_blobs=max_blobs)
+        self._total_param_bytes_fp32 = self.merged.total_param_elems() * 4.0
+
+    # -- Algorithm 1 lines 3-9 -------------------------------------------
+    def predict_performance(self, cand: CandidatePoint,
+                            channel: Channel) -> PartitionPerf:
+        order = self.merged.topo()
+        ci = order.index(cand.name)
+        prefix = order[: ci + 1]
+        suffix = order[ci + 1:]
+        edge_t = subgraph_time(self.merged, prefix, self.edge,
+                               precision="int8", profile=self.edge_profile)
+        cloud_t = subgraph_time(self.merged, suffix, self.cloud,
+                                precision="fp32", profile=self.cloud_profile)
+        # the input node itself costs nothing to "compute"
+        upload_t = channel.transfer_time(cand.transmit_bytes)
+        if self.loop_steps > 1:
+            edge_t *= self.loop_steps
+            cloud_t *= self.loop_steps
+            upload_t *= self.loop_steps
+        edge_param_bytes = cand.edge_param_elems * (self.quant_bits / 8.0)
+        return PartitionPerf(
+            point=cand.name,
+            edge_time_s=edge_t,
+            upload_time_s=upload_t,
+            cloud_time_s=cloud_t,
+            transmit_bytes=cand.transmit_bytes,
+            edge_model_bytes=edge_param_bytes,
+            storage_reduction=1.0 - (edge_param_bytes
+                                     / max(self._total_param_bytes_fp32, 1.0)),
+            edge_flops=cand.edge_flops,
+            n_blobs=cand.n_blobs)
+
+    # -- Algorithm 1 lines 10-14 -------------------------------------------
+    def tune(self, channel: Channel, *,
+             constraints: Optional[Callable[[PartitionPerf], bool]] = None,
+             ) -> tuple[PartitionPerf, List[PartitionPerf]]:
+        """Returns (p_best, P).  ``constraints`` filters feasible points
+        (e.g. edge storage budget); best = argmin total latency among
+        feasible, the paper's ``Env(p_i) is better than Env(p_best)``."""
+        perfs = [self.predict_performance(c, channel) for c in self.candidates]
+        feasible = [p for p in perfs if constraints is None or constraints(p)]
+        if not feasible:
+            feasible = perfs
+        best = min(feasible, key=lambda p: p.total_s)
+        return best, perfs
+
+    def cloud_only(self, channel: Channel) -> PartitionPerf:
+        """Baseline: ship the raw input, run everything in the cloud."""
+        inp = [c for c in self.candidates
+               if self.merged.nodes[c.name].op == "input"]
+        assert inp, "graph has no input node"
+        return self.predict_performance(inp[0], channel)
+
+    def speedup_vs_cloud_only(self, channel: Channel) -> float:
+        best, _ = self.tune(channel)
+        return self.cloud_only(channel).total_s / best.total_s
+
+
+def auto_tune(graph: LayerGraph, edge: DeviceModel, cloud: DeviceModel,
+              channel: Channel, **kw) -> tuple[PartitionPerf, List[PartitionPerf]]:
+    """One-shot convenience wrapper (Algorithm 1 end-to-end)."""
+    return AutoTuner(graph, edge, cloud, **kw).tune(channel)

@@ -1,0 +1,190 @@
+"""Cloud-edge collaborative inference runtime (paper Fig. 1, right side).
+
+A model participates by exposing itself as a ``SegmentedModel``: an ordered
+list of single-tensor-in/single-tensor-out segments whose boundaries are
+exactly the candidate partition points of its ``LayerGraph`` (between two
+consecutive single-blob cuts the subgraph is a tensor→tensor function by
+construction, so this segmentation always exists).
+
+``CollaborativeEngine`` then implements the deployment flow:
+
+  edge:  INT8 engine — weights stored int8 per-channel (the "model
+         download"), activations statically calibrated per-tensor
+         (off-line profiling), executed via fake-quant (identical lattice
+         math to the Pallas int8 kernel path).
+  wire:  the boundary blob is quantized per Eq.(1) → int8 + (scale, zp),
+         shipped through a simulated wireless ``Channel``.
+  cloud: dequantizes per Eq.(2) and runs the FP32 suffix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import Channel
+from repro.core.graph import LayerGraph
+from repro.core.partition import candidate_partition_points
+from repro.core.quant import (QuantParams, compute_qparams, dequantize,
+                              pytree_quant_bytes, quantize, quantize_pytree,
+                              dequantize_pytree)
+from repro.models.layers import QuantCtx, make_calib_ctx
+
+Params = Any
+ApplyFn = Callable[..., jax.Array]     # (params, x, *, qctx=None) -> y
+
+
+@dataclasses.dataclass
+class Segment:
+    name: str                  # must equal a candidate point in the graph
+    apply: ApplyFn
+    params: Params
+
+
+@dataclasses.dataclass
+class SegmentedModel:
+    name: str
+    graph: LayerGraph
+    segments: List[Segment]
+    max_blobs: int = 1
+
+    def candidate_names(self) -> List[str]:
+        return [c.name for c in candidate_partition_points(
+            self.graph, max_blobs=self.max_blobs)]
+
+    def full_apply(self, x: jax.Array) -> jax.Array:
+        for seg in self.segments:
+            x = seg.apply(seg.params, x)
+        return x
+
+    def verify_alignment(self) -> None:
+        cands = set(self.candidate_names())
+        for seg in self.segments:
+            assert seg.name in cands, (
+                f"segment {seg.name} is not a candidate partition point; "
+                f"candidates: {sorted(cands)}")
+
+
+@dataclasses.dataclass
+class TransmissionRecord:
+    blob_bytes: int
+    precision: str
+    simulated_latency_s: float
+    edge_wall_s: float
+    cloud_wall_s: float
+
+
+class CollaborativeEngine:
+    """Mixed-precision split inference at a chosen partition point."""
+
+    def __init__(self, model: SegmentedModel, cut: str, *,
+                 channel: Optional[Channel] = None,
+                 calib_batches: Optional[Sequence[jax.Array]] = None,
+                 a_bits: int = 8, w_bits: int = 8):
+        names = [s.name for s in model.segments]
+        if cut == "input":
+            k = -1
+        else:
+            assert cut in names, f"{cut} not in segments {names}"
+            k = names.index(cut)
+        self.model = model
+        self.cut = cut
+        self.channel = channel or Channel(bandwidth_bytes_per_s=float("inf"))
+        self.edge_segments = model.segments[: k + 1]
+        self.cloud_segments = model.segments[k + 1:]
+        self.a_bits, self.w_bits = a_bits, w_bits
+
+        # --- off-line: quantize the edge model (the "model download") ----
+        edge_params = [s.params for s in self.edge_segments]
+        self._edge_q, self._edge_qp = quantize_pytree(
+            edge_params, bits=w_bits)
+        fp_bytes, q_bytes = pytree_quant_bytes(edge_params, bits=w_bits)
+        self.edge_download_bytes = q_bytes
+        self.edge_fp32_bytes = fp_bytes
+        total_fp, _ = pytree_quant_bytes(
+            [s.params for s in model.segments], bits=w_bits)
+        self.storage_reduction = 1.0 - (q_bytes / total_fp if total_fp else 0.0)
+
+        # --- off-line: calibrate edge activation thresholds --------------
+        self.act_scales: Dict[str, QuantParams] = {}
+        if calib_batches is not None and self.edge_segments:
+            ctx = make_calib_ctx(a_bits=a_bits, w_bits=w_bits)
+            for xb in calib_batches:
+                h = xb
+                for seg in self.edge_segments:
+                    h = seg.apply(seg.params, h, qctx=ctx)
+            self.act_scales = ctx.finalize_calibration()
+
+        self._edge_jit = None
+        self._cloud_jit = None
+
+    # -- engines -----------------------------------------------------------
+    def _edge_ctx(self) -> QuantCtx:
+        if self.act_scales:
+            return QuantCtx(mode="static", scales=self.act_scales,
+                            a_bits=self.a_bits, w_bits=self.w_bits)
+        return QuantCtx(mode="dynamic", a_bits=self.a_bits, w_bits=self.w_bits)
+
+    def edge_forward(self, x: jax.Array) -> jax.Array:
+        """INT8 engine: runs the prefix with quantized weights+acts."""
+        if not self.edge_segments:
+            return x
+        if self._edge_jit is None:
+            qctx = self._edge_ctx()
+            segs = self.edge_segments
+            # weights: use the int8-stored, dequantized lattice values —
+            # exactly what the deployed edge engine computes with.
+            deq_params = dequantize_pytree(self._edge_q, self._edge_qp)
+
+            def run(params_list, h):
+                for seg, p in zip(segs, params_list):
+                    h = seg.apply(p, h, qctx=qctx)
+                return h
+            self._edge_jit = jax.jit(run)
+            self._edge_params = deq_params
+        return self._edge_jit(self._edge_params, x)
+
+    def cloud_forward(self, x: jax.Array) -> jax.Array:
+        if not self.cloud_segments:
+            return x
+        if self._cloud_jit is None:
+            segs = self.cloud_segments
+
+            def run(params_list, h):
+                for seg, p in zip(segs, params_list):
+                    h = seg.apply(p, h)
+                return h
+            self._cloud_jit = jax.jit(run)
+            self._cloud_params = [s.params for s in segs]
+        return self._cloud_jit(self._cloud_params, x)
+
+    # -- end-to-end ----------------------------------------------------------
+    def infer(self, x: jax.Array) -> tuple[jax.Array, TransmissionRecord]:
+        t0 = time.perf_counter()
+        if self.edge_segments:
+            h = self.edge_forward(x)
+            h = jax.block_until_ready(h)
+            t1 = time.perf_counter()
+            # Eq.(1): quantize the boundary blob for transmission
+            qp = compute_qparams(h, bits=self.a_bits)
+            blob = quantize(h, qp)
+            blob_bytes = blob.size * blob.dtype.itemsize + 8
+            precision = "int8"
+            # Eq.(2): cloud dequantizes
+            h = dequantize(blob, qp)
+        else:
+            t1 = time.perf_counter()
+            blob_bytes = x.size * 4
+            precision = "fp32"
+            h = x
+        latency = self.channel.transfer_time(blob_bytes)
+        y = self.cloud_forward(h)
+        y = jax.block_until_ready(y)
+        t2 = time.perf_counter()
+        return y, TransmissionRecord(
+            blob_bytes=int(blob_bytes), precision=precision,
+            simulated_latency_s=latency, edge_wall_s=t1 - t0,
+            cloud_wall_s=t2 - t1)

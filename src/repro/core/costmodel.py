@@ -1,0 +1,115 @@
+"""Device / channel cost models for Algorithm 1's ``PredictPerformance``.
+
+The paper profiles each operator off-line on the physical edge device
+(Jetson TX2 + gemmlowp) and cloud server (TITAN Xp + cuDNN).  We model
+both as roofline devices — ``time = max(compute, memory)`` per layer plus
+a fixed launch overhead — and additionally support *measured* per-layer
+profiles (``Profile``) that override the analytic model, which is exactly
+the paper's off-line profiling mode.
+
+The cloud can also be a multi-chip TPU pod; its per-layer time then
+includes a collective term (bytes moved / link bandwidth) so the
+auto-tuner sees the cost of distributed cloud inference (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+from repro.core.graph import LayerGraph, Node
+
+__all__ = ["DeviceModel", "Channel", "Profile",
+           "EDGE_TX2_CLASS", "CLOUD_TITANXP_CLASS", "CLOUD_TPU_V5E_CHIP",
+           "layer_time", "subgraph_time", "tpu_v5e_pod"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """A roofline device. Rates in ops/s and bytes/s."""
+    name: str
+    peak_flops_fp32: float
+    peak_ops_int8: float
+    dram_bw: float
+    launch_overhead_s: float = 20e-6
+    n_chips: int = 1
+    link_bw: float = 0.0            # per-chip interconnect (pods)
+
+    def scaled(self, n_chips: int) -> "DeviceModel":
+        return dataclasses.replace(
+            self, name=f"{self.name}x{n_chips}", n_chips=n_chips)
+
+
+# Defaults approximating the paper's hardware (DESIGN.md §3):
+# TX2-class edge — gemmlowp on 4xA57 delivers single-digit effective GOPS
+# (the paper's AlexNet conv1-5 runs in ~0.3 s ≈ 1.4 GFLOP / 5 GOPS), and
+# LPDDR4 effective bandwidth for streaming cold weights is a few GB/s.
+EDGE_TX2_CLASS = DeviceModel(
+    name="edge-tx2", peak_flops_fp32=2.0e9, peak_ops_int8=5.0e9,
+    dram_bw=6e9, launch_overhead_s=200e-6)
+
+# TITAN Xp-class cloud GPU: 12.1 TFLOP/s fp32, 547 GB/s.
+CLOUD_TITANXP_CLASS = DeviceModel(
+    name="cloud-titanxp", peak_flops_fp32=12.1e12, peak_ops_int8=12.1e12,
+    dram_bw=547e9, launch_overhead_s=10e-6)
+
+# One TPU v5e chip (the roofline constants of the assignment).
+CLOUD_TPU_V5E_CHIP = DeviceModel(
+    name="tpu-v5e", peak_flops_fp32=197e12, peak_ops_int8=394e12,
+    dram_bw=819e9, launch_overhead_s=5e-6, link_bw=50e9)
+
+
+def tpu_v5e_pod(n_chips: int = 256) -> DeviceModel:
+    return CLOUD_TPU_V5E_CHIP.scaled(n_chips)
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """Wireless link between edge and cloud (the paper's environment)."""
+    bandwidth_bytes_per_s: float
+    rtt_s: float = 0.0
+    name: str = ""
+
+    def transfer_time(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return nbytes / self.bandwidth_bytes_per_s + self.rtt_s
+
+    @classmethod
+    def from_kbps(cls, kilobytes_per_s: float, rtt_ms: float = 0.0):
+        return cls(bandwidth_bytes_per_s=kilobytes_per_s * 1e3,
+                   rtt_s=rtt_ms * 1e-3,
+                   name=f"{kilobytes_per_s:g}KB/s")
+
+
+# measured per-layer seconds, node name -> time
+Profile = Mapping[str, float]
+
+
+def layer_time(node: Node, dev: DeviceModel, *, precision: str,
+               profile: Optional[Profile] = None) -> float:
+    """Roofline time of one (possibly fused) layer on ``dev``."""
+    if profile is not None and node.name in profile:
+        return profile[node.name]
+    if precision == "int8":
+        compute = node.flops / (dev.peak_ops_int8 * dev.n_chips)
+        pbytes = node.param_elems * 1.0
+        abytes = node.out_elems * 1.0
+    else:
+        compute = node.flops / (dev.peak_flops_fp32 * dev.n_chips)
+        pbytes = node.param_elems * 4.0
+        abytes = node.out_elems * 4.0
+    # per-chip memory traffic: weights stream once, activations in+out
+    in_elems = sum(1 for _ in node.inputs) * node.out_elems  # approx
+    mem_bytes = pbytes / dev.n_chips + abytes * 2
+    memory = mem_bytes / dev.dram_bw
+    t = max(compute, memory) + dev.launch_overhead_s
+    # distributed cloud: moving activations between chips each layer
+    if dev.n_chips > 1 and dev.link_bw > 0:
+        t += abytes / (dev.link_bw * dev.n_chips)
+    return t
+
+
+def subgraph_time(g: LayerGraph, names, dev: DeviceModel, *, precision: str,
+                  profile: Optional[Profile] = None) -> float:
+    return sum(layer_time(g.nodes[n], dev, precision=precision,
+                          profile=profile) for n in names)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the quantized-compute kernels.
+
+These implement the paper's "On-device Computation" (§2.1 steps 1-4)
+exactly, with int32 accumulation and the full asymmetric zero-point
+correction — the Pallas kernels must match these bit-for-bit on the
+integer path and to float tolerance on the epilogue.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantParams
+
+_ACTS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def int8_matmul_ref(
+    a_q: jax.Array,                 # int8 [M, K]
+    b_q: jax.Array,                 # int8 [K, N]
+    qa: QuantParams,                # per-tensor activation qparams
+    qb: QuantParams,                # per-tensor or per-channel(axis=1) weights
+    *,
+    bias: Optional[jax.Array] = None,   # f32 [N]
+    act: Optional[str] = None,
+    out_qp: Optional[QuantParams] = None,
+) -> jax.Array:
+    """Paper steps 1-4: integer matmul → Eq.2 dequant → act → Eq.1 requant.
+
+    real(A)·real(B) = sa·sb·(A_q·B_q − za·colsum(B_q) − zb·rowsum(A_q)
+                            + za·zb·K)
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2
+    acc = jax.lax.dot_general(
+        a_q, b_q, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)              # int32 [M, N]
+    rowsum_a = jnp.sum(a_q.astype(jnp.int32), axis=1, keepdims=True)  # [M,1]
+    colsum_b = jnp.sum(b_q.astype(jnp.int32), axis=0, keepdims=True)  # [1,N]
+
+    sa = qa.scale.reshape(1, 1)
+    za = qa.zero_point.reshape(1, 1)
+    sb = qb.scale.reshape(1, -1)      # broadcasts per-tensor or per-channel
+    zb = qb.zero_point.reshape(1, -1)
+
+    real = sa * sb * (acc.astype(jnp.float32)
+                      - za * colsum_b.astype(jnp.float32)
+                      - zb * rowsum_a.astype(jnp.float32)
+                      + za * zb * float(k))
+    if bias is not None:
+        real = real + bias.reshape(1, -1)
+    real = _ACTS[act](real)
+    if out_qp is None:
+        return real
+    q = jnp.round(real / out_qp.scale + out_qp.zero_point)
+    return jnp.clip(q, out_qp.qmin, out_qp.qmax).astype(out_qp.storage_dtype)
+
+
+def quantized_dense_ref(
+    x: jax.Array,                   # f32 [..., K]
+    w_q: jax.Array,                 # int8 [K, N]
+    qx: QuantParams,
+    qw: QuantParams,
+    *,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    out_qp: Optional[QuantParams] = None,
+) -> jax.Array:
+    """fp input → quantize (Eq.1) → int8 matmul → epilogue."""
+    from repro.core.quant import quantize
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_q = quantize(x2, qx)
+    out = int8_matmul_ref(x_q, w_q, qx, qw, bias=bias, act=act, out_qp=out_qp)
+    return out.reshape(*lead, out.shape[-1])

@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the ``pod`` axis
+is the slow (DCN-class) dimension; data-parallel replicas and ZeRO
+sharding may span it (see repro.launch.shardings).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "batch_axes",
+           "fsdp_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """Axes the global batch shards over (DP/FSDP dimension)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """Axes parameters are ZeRO-sharded over (== the batch axes)."""
+    return batch_axes(mesh)

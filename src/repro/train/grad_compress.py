@@ -1,0 +1,69 @@
+"""INT8 gradient compression with error feedback (distributed-optimization
+trick; paper-adjacent: the same Eq.1/Eq.2 scalar quantization applied to
+the gradient all-reduce instead of the activations).
+
+    c_t   = Q(g_t + e_t)            # int8 per-leaf, per-tensor scale
+    e_t+1 = (g_t + e_t) - Q⁻¹(c_t)  # residual carried to the next step
+
+The all-reduce then moves 1 byte/grad element instead of 4 (plus an 8-byte
+scale), a 4x cut of the gradient collective — error feedback keeps SGD
+convergence (Seide et al.; Karimireddy et al. 2019).
+
+``compress``/``decompress`` are jit-safe; ``compressed_allreduce_bytes``
+reports the wire saving for the roofline.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantParams, compute_qparams, dequantize, quantize
+
+Params = Any
+
+__all__ = ["init_error_feedback", "compress", "decompress",
+           "compress_with_feedback", "compressed_allreduce_bytes"]
+
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(tree: Params, *, bits: int = 8) -> Tuple[Params, Params]:
+    """Per-leaf symmetric quantization → (int8 tree, qparams tree)."""
+    def one(g):
+        qp = compute_qparams(g.astype(jnp.float32), bits=bits,
+                             symmetric=True)
+        return quantize(g.astype(jnp.float32), qp), qp
+    flat, tdef = jax.tree_util.tree_flatten(tree)
+    qs, qps = zip(*[one(g) for g in flat]) if flat else ((), ())
+    return (jax.tree_util.tree_unflatten(tdef, list(qs)),
+            jax.tree_util.tree_unflatten(tdef, list(qps)))
+
+
+def decompress(q_tree: Params, qp_tree: Params) -> Params:
+    return jax.tree_util.tree_map(dequantize, q_tree, qp_tree,
+                                  is_leaf=lambda x: isinstance(x, QuantParams))
+
+
+def compress_with_feedback(grads: Params, error: Params, *, bits: int = 8
+                           ) -> Tuple[Params, Params]:
+    """Returns (decompressed grads as transmitted, new error state)."""
+    corrected = jax.tree_util.tree_map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    q, qp = compress(corrected, bits=bits)
+    transmitted = decompress(q, qp)
+    new_error = jax.tree_util.tree_map(lambda c, t: c - t, corrected,
+                                       transmitted)
+    return transmitted, new_error
+
+
+def compressed_allreduce_bytes(params: Params, *, bits: int = 8
+                               ) -> Tuple[int, int]:
+    """(fp32 all-reduce bytes, compressed bytes) for the wire model."""
+    n = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    return n * 4, n * bits // 8 + n_leaves * 8

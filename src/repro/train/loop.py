@@ -1,0 +1,117 @@
+"""Trainer: the generic training loop used by the examples and tests.
+
+Features: jitted step (AdamW + cosine LR + clipping), gradient
+accumulation over microbatches (lax.scan), optional QAT (fake-quant in
+the loss), optional int8 error-feedback gradient compression, periodic
+checkpointing, metric history.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.checkpoint import CheckpointManager, latest_step, \
+    restore_checkpoint
+from repro.train.grad_compress import (compress_with_feedback,
+                                       init_error_feedback)
+from repro.train.optim import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update, cosine_schedule)
+
+Params = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 10
+    grad_accum: int = 1
+    grad_compress: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable[[Params, Dict], jax.Array],
+                 params: Params, cfg: TrainerConfig):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.params = params
+        self.opt = adamw_init(params)
+        self.error = init_error_feedback(params) if cfg.grad_compress else None
+        self.schedule = cosine_schedule(cfg.lr, cfg.warmup, cfg.n_steps)
+        self.history: List[Dict] = []
+        self._step_jit = jax.jit(self._step)
+        self._mgr = (CheckpointManager(cfg.ckpt_dir, every=cfg.ckpt_every)
+                     if cfg.ckpt_dir else None)
+
+    # -- one optimizer step (possibly accumulating microbatches) ----------
+    def _step(self, params, opt, error, batch):
+        cfg = self.cfg
+
+        if cfg.grad_accum > 1:
+            def micro(c, mb):
+                loss, g = jax.value_and_grad(self.loss_fn)(params, mb)
+                acc_loss, acc_g = c
+                return (acc_loss + loss,
+                        jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.float32(0.0), zeros), batch)
+            inv = 1.0 / cfg.grad_accum
+            loss = loss * inv
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        else:
+            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+
+        if error is not None:
+            grads, error = compress_with_feedback(grads, error)
+
+        lr = self.schedule(opt.step)
+        params, opt, gnorm = adamw_update(grads, opt, params, cfg.adamw,
+                                          lr=lr)
+        return params, opt, error, {"loss": loss, "grad_norm": gnorm,
+                                    "lr": lr}
+
+    def maybe_restore(self) -> int:
+        if self._mgr is None or latest_step(self.cfg.ckpt_dir) is None:
+            return 0
+        state = {"params": self.params, "opt": self.opt}
+        state, step, _ = restore_checkpoint(self.cfg.ckpt_dir, state)
+        self.params, self.opt = state["params"], state["opt"]
+        return step
+
+    def fit(self, data: Iterator[Dict], *, start_step: int = 0) -> List[Dict]:
+        cfg = self.cfg
+        step = start_step
+        for batch in data:
+            if step >= cfg.n_steps:
+                break
+            batch = jax.tree_util.tree_map(jnp.asarray, batch)
+            t0 = time.perf_counter()
+            self.params, self.opt, self.error, metrics = self._step_jit(
+                self.params, self.opt, self.error, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_time_s"] = time.perf_counter() - t0
+            step += 1
+            metrics["step"] = step
+            self.history.append(metrics)
+            if self._mgr is not None:
+                self._mgr.maybe_save(step, {"params": self.params,
+                                            "opt": self.opt})
+            if cfg.log_every and step % cfg.log_every == 0:
+                print(f"step {step:5d}  loss {metrics['loss']:.4f}  "
+                      f"gnorm {metrics['grad_norm']:.3f}  "
+                      f"lr {metrics['lr']:.2e}  "
+                      f"{metrics['step_time_s'] * 1e3:.0f} ms", flush=True)
+        if self._mgr is not None:
+            self._mgr.wait()
+        return self.history

@@ -1,0 +1,33 @@
+"""Quantization-aware training: train with the paper's Eq.1/Eq.2 lattice in
+the loop (fake-quant STE from repro.core.quant) so the INT8 edge engine
+loses (almost) nothing at deployment.
+
+Usage: wrap any model loss that threads ``qctx``:
+
+    qat_loss = make_qat_loss(lambda p, b, qctx: my_loss(p, b, qctx=qctx))
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from repro.models.layers import QuantCtx
+
+__all__ = ["make_qat_loss", "qat_ctx"]
+
+
+def qat_ctx(*, w_bits: int = 8, a_bits: int = 8,
+            per_channel: bool = True) -> QuantCtx:
+    """Dynamic fake-quant context (jit-safe; thresholds from each batch,
+    mirroring the paper's per-tensor activation quantization)."""
+    return QuantCtx(mode="dynamic", w_bits=w_bits, a_bits=a_bits,
+                    per_channel=per_channel)
+
+
+def make_qat_loss(loss_with_qctx: Callable[..., Any], *, w_bits: int = 8,
+                  a_bits: int = 8) -> Callable[..., Any]:
+    ctx = qat_ctx(w_bits=w_bits, a_bits=a_bits)
+
+    def loss(params, batch):
+        return loss_with_qctx(params, batch, ctx)
+
+    return loss

@@ -1,0 +1,124 @@
+"""Collaborative-inference runtime tests: edge INT8 + cloud FP32 must match
+the monolithic FP32 model up to quantization noise, at every candidate cut."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.collab import CollaborativeEngine, Segment, SegmentedModel
+from repro.core.costmodel import Channel
+from repro.core.graph import LayerGraph
+from repro.models import layers as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_cnn(key=None, c=8, d=16, n_cls=10, img=16):
+    """conv → conv → gap+dense, segmented at each conv boundary."""
+    key = key or jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p1 = L.conv2d_init(k1, 3, 3, c)
+    p2 = L.conv2d_init(k2, 3, c, d)
+    p3 = L.dense_init(k3, d, n_cls)
+
+    def s1(p, x, *, qctx=None):
+        return L.conv2d(p, x, qctx=qctx, name="conv1", act="relu")
+
+    def s2(p, x, *, qctx=None):
+        return L.conv2d(p, x, stride=2, qctx=qctx, name="conv2", act="relu")
+
+    def s3(p, x, *, qctx=None):
+        x = jnp.mean(x, axis=(1, 2))
+        return L.dense(p, x, qctx=qctx, name="head")
+
+    g = LayerGraph("tiny-cnn")
+    g.add("input", "input", [], (1, img, img, 3))
+    g.add("conv1", "conv", ["input"], (1, img, img, c),
+          flops=2 * 9 * 3 * c * img * img, param_elems=9 * 3 * c + c)
+    g.add("conv2", "conv", ["conv1"], (1, img // 2, img // 2, d),
+          flops=2 * 9 * c * d * (img // 2) ** 2, param_elems=9 * c * d + d)
+    g.add("head", "dense", ["conv2"], (1, n_cls), flops=2 * d * n_cls,
+          param_elems=d * n_cls + n_cls)
+    return SegmentedModel(
+        name="tiny-cnn", graph=g,
+        segments=[Segment("conv1", s1, p1), Segment("conv2", s2, p2),
+                  Segment("head", s3, p3)])
+
+
+def _input(batch=2, img=16, seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).rand(batch, img, img, 3).astype(np.float32))
+
+
+def test_segments_align_with_candidates():
+    m = tiny_cnn()
+    m.verify_alignment()
+
+
+@pytest.mark.parametrize("cut", ["input", "conv1", "conv2", "head"])
+def test_collab_matches_fp32_within_quant_noise(cut):
+    m = tiny_cnn()
+    x = _input()
+    truth = m.full_apply(x)
+    eng = CollaborativeEngine(m, cut, calib_batches=[_input(seed=7)])
+    got, rec = eng.infer(x)
+    rel = float(jnp.linalg.norm(got - truth) / jnp.linalg.norm(truth))
+    if cut == "input":
+        assert rel < 1e-5                   # cloud-only: fp32 exact up to jit
+
+        assert rec.precision == "fp32"
+    else:
+        assert rel < 0.12, (cut, rel)       # int8 edge: small error
+        assert rec.precision == "int8"
+
+
+def test_boundary_blob_is_int8_sized():
+    m = tiny_cnn()
+    x = _input(batch=1)
+    eng = CollaborativeEngine(m, "conv2")
+    _, rec = eng.infer(x)
+    # conv2 output at batch=1: 8*8*16 elems → int8 bytes + 8B scale/zp
+    assert rec.blob_bytes == 8 * 8 * 16 + 8
+
+
+def test_edge_download_is_quarter_of_fp32():
+    m = tiny_cnn()
+    eng = CollaborativeEngine(m, "conv2")
+    assert eng.edge_download_bytes < eng.edge_fp32_bytes / 3.5
+    assert 0.0 < eng.storage_reduction < 1.0
+
+
+def test_channel_latency_scales_with_bytes():
+    m = tiny_cnn()
+    x = _input(batch=1)
+    slow = CollaborativeEngine(m, "conv1", channel=Channel.from_kbps(100))
+    fast = CollaborativeEngine(m, "conv1", channel=Channel.from_kbps(10000))
+    _, r_slow = slow.infer(x)
+    _, r_fast = fast.infer(x)
+    assert r_slow.simulated_latency_s == pytest.approx(
+        100 * r_fast.simulated_latency_s)
+    assert r_slow.simulated_latency_s == pytest.approx(
+        r_slow.blob_bytes / 100e3)
+
+
+def test_static_calibration_close_to_dynamic():
+    m = tiny_cnn()
+    x = _input()
+    calibrated = CollaborativeEngine(
+        m, "conv2", calib_batches=[_input(seed=i) for i in range(4)])
+    dynamic = CollaborativeEngine(m, "conv2")
+    y_c, _ = calibrated.infer(x)
+    y_d, _ = dynamic.infer(x)
+    rel = float(jnp.linalg.norm(y_c - y_d) / jnp.linalg.norm(y_d))
+    assert rel < 0.1
+
+
+def test_edge_only_cut_runs_everything_on_edge():
+    m = tiny_cnn()
+    x = _input()
+    eng = CollaborativeEngine(m, "head")
+    y, rec = eng.infer(x)
+    assert rec.cloud_wall_s >= 0 and not eng.cloud_segments
+    truth = m.full_apply(x)
+    rel = float(jnp.linalg.norm(y - truth) / jnp.linalg.norm(truth))
+    assert rel < 0.15

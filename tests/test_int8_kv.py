@@ -1,0 +1,52 @@
+"""INT8 KV-cache decode: outputs must track the bf16-cache path (the
+paper's Eq.1/2 applied to serving state — §Perf hillclimb #1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (LMConfig, decode_step, forward,
+                                      init_cache, init_lm, prefill)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = LMConfig(name="kv-tiny", n_layers=2, d_model=32, n_heads=4, n_kv=2,
+               d_ff=64, vocab=64, max_seq=64, remat=False)
+
+
+def test_int8_cache_decode_tracks_fp32():
+    params = init_lm(jax.random.PRNGKey(0), CFG)
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, CFG.vocab, (2, 9)), jnp.int32)
+
+    # reference: fp32 cache
+    cache = init_cache(CFG, 2, max_len=16)
+    _, cache = prefill(params, toks[:, :8], CFG, cache=cache)
+    ref, _ = decode_step(params, toks[:, 8], cache, jnp.int32(8), CFG)
+
+    # int8 cache: decode all 9 positions step by step
+    qcache = init_cache(CFG, 2, max_len=16, quantized=True)
+    # calibrate scales from actual k/v magnitudes (generous range)
+    qcache["k_scale"] = jnp.full_like(qcache["k_scale"], 0.02)
+    qcache["v_scale"] = jnp.full_like(qcache["v_scale"], 0.02)
+    logits = None
+    for i in range(9):
+        logits, qcache = decode_step(params, toks[:, i], qcache,
+                                     jnp.int32(i), CFG)
+    assert qcache["k"].dtype == jnp.int8
+    rel = float(jnp.linalg.norm(logits - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.25, rel
+    # ranking mostly preserved
+    agree = float(jnp.mean(jnp.argmax(logits, -1) == jnp.argmax(ref, -1)))
+    assert agree >= 0.5
+
+
+def test_int8_cache_is_half_the_bytes():
+    c16 = init_cache(CFG, 2, max_len=16)
+    c8 = init_cache(CFG, 2, max_len=16, quantized=True)
+
+    def nbytes(t):
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(t))
+
+    # fp32-config cache is 4 B/elem; int8 is 1 B + tiny scales
+    assert nbytes(c8) < nbytes(c16) / 3.5

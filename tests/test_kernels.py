@@ -1,0 +1,120 @@
+"""Pallas int8 matmul kernel vs pure-jnp oracle — shape/dtype sweeps.
+
+Kernels run in interpret mode on CPU (the TPU is the compile target);
+the integer accumulation path must match the oracle exactly and the
+float epilogue to tight tolerance.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import QuantParams, compute_qparams, quantize
+from repro.kernels.ops import int8_matmul, quantized_dense
+from repro.kernels.ref import int8_matmul_ref, quantized_dense_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_inputs(m, k, n, seed=0, per_channel=False):
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.uniform(-4, 3, (m, k)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(-0.8, 1.1, (k, n)).astype(np.float32))
+    qa = compute_qparams(a)
+    qw = compute_qparams(w, axis=1 if per_channel else None)
+    return quantize(a, qa), quantize(w, qw), qa, qw
+
+
+SHAPES = [
+    (8, 16, 8),
+    (16, 32, 24),       # non-multiple of blocks
+    (128, 128, 128),
+    (64, 256, 96),
+    (1, 64, 40),        # single row (decode-like)
+    (33, 65, 17),       # awkward primes
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_matmul_matches_ref_f32out(m, k, n, per_channel):
+    a_q, b_q, qa, qw = _mk_inputs(m, k, n, seed=m + n, per_channel=per_channel)
+    got = int8_matmul(a_q, b_q, qa, qw, interpret=True)
+    want = int8_matmul_ref(a_q, b_q, qa, qw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu"])
+def test_matmul_fused_activation(act):
+    a_q, b_q, qa, qw = _mk_inputs(32, 64, 48, seed=7)
+    bias = jnp.asarray(np.random.RandomState(8).randn(48).astype(np.float32))
+    got = int8_matmul(a_q, b_q, qa, qw, bias=bias, act=act, interpret=True)
+    want = int8_matmul_ref(a_q, b_q, qa, qw, bias=bias, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_requant_int8_out_exact():
+    a_q, b_q, qa, qw = _mk_inputs(64, 128, 32, seed=3)
+    ref_f32 = int8_matmul_ref(a_q, b_q, qa, qw, act="relu")
+    out_qp = compute_qparams(ref_f32)
+    got = int8_matmul(a_q, b_q, qa, qw, act="relu", out_qp=out_qp,
+                      interpret=True)
+    want = int8_matmul_ref(a_q, b_q, qa, qw, act="relu", out_qp=out_qp)
+    assert got.dtype == jnp.int8
+    # integer outputs must agree within 1 ulp (float epilogue rounding)
+    diff = np.abs(np.asarray(got, np.int32) - np.asarray(want, np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.01
+
+
+def test_matmul_against_float_truth():
+    """End-to-end: quantized path ≈ fp32 matmul within quantization noise."""
+    m, k, n = 64, 256, 64
+    rng = np.random.RandomState(11)
+    a = jnp.asarray(rng.uniform(-1, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(-1, 1, (k, n)).astype(np.float32))
+    qa, qw = compute_qparams(a), compute_qparams(w, axis=1)
+    got = int8_matmul(quantize(a, qa), quantize(w, qw), qa, qw,
+                      interpret=True)
+    truth = a @ w
+    rel = float(jnp.linalg.norm(got - truth) / jnp.linalg.norm(truth))
+    assert rel < 0.01, rel
+
+
+def test_quantized_dense_3d_batch():
+    rng = np.random.RandomState(12)
+    x = jnp.asarray(rng.randn(4, 9, 32).astype(np.float32))
+    w = jnp.asarray(rng.randn(32, 24).astype(np.float32))
+    qx, qw = compute_qparams(x), compute_qparams(w, axis=1)
+    w_q = quantize(w, qw)
+    got = quantized_dense(x, w_q, qx, qw, act="relu", interpret=True)
+    want = quantized_dense_ref(x, w_q, qx, qw, act="relu")
+    assert got.shape == (4, 9, 24)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_blocked_grid_multiple_k_steps():
+    """Force a multi-step K grid so the scratch accumulation path runs."""
+    a_q, b_q, qa, qw = _mk_inputs(16, 512, 16, seed=5)
+    got = int8_matmul(a_q, b_q, qa, qw, block=(16, 16, 128), interpret=True)
+    want = int8_matmul_ref(a_q, b_q, qa, qw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 80), st.integers(1, 40),
+       st.booleans())
+def test_prop_any_shape_matches_ref(m, k, n, per_channel):
+    a_q, b_q, qa, qw = _mk_inputs(m, k, n, seed=m * 89 + k * 7 + n,
+                                  per_channel=per_channel)
+    got = int8_matmul(a_q, b_q, qa, qw, interpret=True)
+    want = int8_matmul_ref(a_q, b_q, qa, qw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)

@@ -1,0 +1,86 @@
+"""Hypothesis property tests on the partition system's invariants, over
+randomly generated DAGs (random branches and shortcuts)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.graph import LayerGraph
+from repro.core.partition import (candidate_partition_points,
+                                  merge_non_parametric)
+
+
+@st.composite
+def random_graph(draw):
+    """Random topo-ordered DAG: chain + random extra (skip) edges +
+    random non-parametric nodes."""
+    n = draw(st.integers(3, 14))
+    g = LayerGraph("rand")
+    g.add("input", "input", [], (1, 8))
+    names = ["input"]
+    for i in range(n):
+        op = draw(st.sampled_from(["conv", "dense", "relu", "pool", "add"]))
+        # always connect to the previous node (keeps it a single chain
+        # backbone); maybe add a skip edge from an earlier node
+        inputs = [names[-1]]
+        if len(names) > 2 and draw(st.booleans()):
+            extra = draw(st.sampled_from(names[:-1]))
+            if extra not in inputs:
+                inputs.append(extra)
+        if op in ("relu", "pool"):
+            inputs = [names[-1]]
+        parametric = op in ("conv", "dense")
+        g.add(f"n{i}", op, inputs, (1, 8),
+              flops=float(draw(st.integers(1, 100))) * 1e3,
+              param_elems=draw(st.integers(0, 1000)) if parametric else 0)
+        names.append(f"n{i}")
+    return g
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_graph())
+def test_candidates_are_single_blob_own_output(g):
+    merged = merge_non_parametric(g)
+    cands = candidate_partition_points(g, include_input=False,
+                                       include_last=False)
+    last = merged.topo()[-1]
+    for c in cands:
+        blobs = merged.crossing_blobs(c.name)
+        assert len(blobs) <= 1
+        if c.name != last and blobs:
+            assert blobs[0].source == c.name
+            assert blobs[0].precision == "int8"
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_graph())
+def test_merge_preserves_flops_and_params(g):
+    merged = merge_non_parametric(g)
+    assert abs(merged.total_flops() - g.total_flops()) < 1e-6
+    assert merged.total_param_elems() == g.total_param_elems()
+    # merged graph contains no mergeable non-parametric nodes
+    for n in merged.topo():
+        nd = merged[n]
+        assert nd.parametric or nd.op == "input" or not nd.inputs
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_graph())
+def test_edge_flops_monotone_and_transmit_positive(g):
+    cands = candidate_partition_points(g)
+    flops = [c.edge_flops for c in cands]
+    assert flops == sorted(flops)
+    assert all(c.transmit_bytes > 0 for c in cands)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graph(), st.floats(1e3, 1e9))
+def test_autotune_best_never_worse_than_endpoints(g, bw):
+    """Algorithm 1's pick must beat (or tie) both cloud-only and
+    edge-only — it optimizes over a superset."""
+    from repro.core.autotune import AutoTuner
+    from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel,
+                                      EDGE_TX2_CLASS)
+    tuner = AutoTuner(g, EDGE_TX2_CLASS, CLOUD_TITANXP_CLASS)
+    ch = Channel(bandwidth_bytes_per_s=bw)
+    best, perfs = tuner.tune(ch)
+    assert best.total_s <= min(p.total_s for p in perfs) + 1e-12
+    assert best.total_s <= tuner.cloud_only(ch).total_s + 1e-12

@@ -1,0 +1,182 @@
+"""Unit + property tests for repro.core.quant (paper §2.1 Eq.1/2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    EMACalibrator,
+    MinMaxCalibrator,
+    PercentileCalibrator,
+    QuantParams,
+    compute_qparams,
+    dequantize,
+    dequantize_pytree,
+    fake_quant,
+    pytree_quant_bytes,
+    quantize,
+    quantize_pytree,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_roundtrip_error_bounded_by_half_scale():
+    x = jnp.array(np.random.RandomState(0).uniform(-3, 5, size=(256,)),
+                  jnp.float32)
+    qp = compute_qparams(x)
+    err = jnp.abs(dequantize(quantize(x, qp), qp) - x)
+    assert float(jnp.max(err)) <= float(qp.scale) / 2 + 1e-6
+
+
+def test_paper_eq1_eq2_unsigned_matches_formula():
+    """Check our affine code IS the paper's Eq.1/Eq.2 (unsigned repr)."""
+    rng = np.random.RandomState(1)
+    x = rng.uniform(-2.0, 6.0, size=(512,)).astype(np.float32)
+    t_min, t_max = float(x.min()), float(x.max())
+    qp = compute_qparams(jnp.asarray(x), signed=False)
+    q = np.asarray(quantize(jnp.asarray(x), qp), np.float64)
+    # Paper Eq.1 (interior points): (x - Tmin)/|Tmax-Tmin| * 255
+    expect = np.clip(np.round((x - t_min) / abs(t_max - t_min) * 255), 0, 255)
+    assert np.max(np.abs(q - expect)) <= 1.0   # ≤1 ulp from zero-point rounding
+    # Paper Eq.2: scale*q + Tmin
+    deq = np.asarray(dequantize(quantize(jnp.asarray(x), qp), qp))
+    expect_deq = abs(t_max - t_min) / 255 * q + t_min
+    np.testing.assert_allclose(deq, expect_deq, atol=float(qp.scale) * 1.01)
+
+
+def test_signed_unsigned_same_lattice():
+    x = jnp.array(np.random.RandomState(2).uniform(-1, 2, (128,)), jnp.float32)
+    qs = compute_qparams(x, signed=True)
+    qu = compute_qparams(x, signed=False)
+    np.testing.assert_allclose(
+        np.asarray(dequantize(quantize(x, qs), qs)),
+        np.asarray(dequantize(quantize(x, qu), qu)), atol=1e-6)
+    # signed q == unsigned q - 128
+    np.testing.assert_array_equal(
+        np.asarray(quantize(x, qs), np.int32),
+        np.asarray(quantize(x, qu), np.int32) - 128)
+
+
+def test_saturation_clips_to_extremes():
+    qp = compute_qparams(jnp.array([-1.0, 1.0]))
+    q = quantize(jnp.array([-100.0, 100.0]), qp)
+    assert int(q[0]) == qp.qmin and int(q[1]) == qp.qmax
+
+
+def test_zero_exactly_representable():
+    x = jnp.array(np.random.RandomState(3).uniform(0.5, 3.0, (64,)), jnp.float32)
+    qp = compute_qparams(x)   # all-positive data still must represent 0
+    z = dequantize(quantize(jnp.zeros(()), qp), qp)
+    assert abs(float(z)) < 1e-6
+
+
+def test_per_channel_beats_or_matches_per_tensor():
+    rng = np.random.RandomState(4)
+    w = np.concatenate([rng.uniform(-0.01, 0.01, (64, 8)),
+                        rng.uniform(-10, 10, (64, 8))], axis=1).astype(np.float32)
+    w = jnp.asarray(w)
+    qp_t = compute_qparams(w)
+    qp_c = compute_qparams(w, axis=1)
+    # Per-channel scales rescue the small-magnitude channels (cols 0..7);
+    # per-tensor is forced to use the global ±10 range there.
+    small = slice(0, 8)
+    err_t = float(jnp.mean(
+        (dequantize(quantize(w, qp_t), qp_t) - w)[:, small] ** 2))
+    err_c = float(jnp.mean(
+        (dequantize(quantize(w, qp_c), qp_c) - w)[:, small] ** 2))
+    assert err_c < err_t / 100
+
+
+def test_fake_quant_gradient_is_straight_through():
+    x = jnp.linspace(-1.0, 1.0, 11)
+    qp = compute_qparams(x)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, qp)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(11), atol=1e-6)
+    # saturated region has zero gradient
+    far = jnp.array([100.0, -100.0])
+    g2 = jax.grad(lambda v: jnp.sum(fake_quant(v, qp)))(far)
+    np.testing.assert_allclose(np.asarray(g2), np.zeros(2), atol=1e-6)
+
+
+def test_calibrators_agree_on_stationary_stream():
+    rng = np.random.RandomState(5)
+    batches = [jnp.asarray(rng.uniform(-1, 1, (1024,)).astype(np.float32))
+               for _ in range(8)]
+    mm, ema = MinMaxCalibrator(), EMACalibrator(momentum=0.5)
+    pct = PercentileCalibrator(percentile=100.0)
+    for b in batches:
+        mm.observe(b); ema.observe(b); pct.observe(b)
+    s_mm = float(mm.qparams().scale)
+    s_ema = float(ema.qparams().scale)
+    s_pct = float(pct.qparams().scale)
+    assert abs(s_mm - s_pct) / s_mm < 0.05
+    assert abs(s_mm - s_ema) / s_mm < 0.2
+
+
+def test_percentile_robust_to_outliers():
+    rng = np.random.RandomState(6)
+    data = rng.uniform(-1, 1, 100000).astype(np.float32)
+    data[0] = 1e6   # single huge outlier
+    mm, pc = MinMaxCalibrator(), PercentileCalibrator(99.9)
+    mm.observe(jnp.asarray(data)); pc.observe(jnp.asarray(data))
+    assert float(pc.qparams().scale) < float(mm.qparams().scale) / 100
+
+
+def test_pytree_roundtrip_and_storage():
+    params = {"w": jnp.ones((16, 32)) * 0.5, "b": jnp.zeros((32,)),
+              "step": jnp.array(3, jnp.int32)}
+    qt, qpt = quantize_pytree(params)
+    back = dequantize_pytree(qt, qpt)
+    np.testing.assert_allclose(np.asarray(back["w"]), 0.5, atol=1e-2)
+    assert back["step"].dtype == jnp.int32          # non-float passthrough
+    fp, qb = pytree_quant_bytes(params)
+    assert fp == (16 * 32 + 32 + 1) * 4
+    assert qb < fp / 3.5                            # ~4x reduction
+
+
+# ----------------------------- property tests ------------------------------
+
+finite_f32 = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                       allow_infinity=False, width=32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(finite_f32, min_size=2, max_size=200), st.booleans())
+def test_prop_roundtrip_bounded(vals, signed):
+    x = jnp.asarray(np.array(vals, np.float32))
+    qp = compute_qparams(x, signed=signed)
+    err = jnp.max(jnp.abs(dequantize(quantize(x, qp), qp) - x))
+    assert float(err) <= float(qp.scale) * 0.5001 + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(finite_f32, min_size=2, max_size=100))
+def test_prop_quantize_monotone(vals):
+    x = jnp.sort(jnp.asarray(np.array(vals, np.float32)))
+    qp = compute_qparams(x)
+    q = np.asarray(quantize(x, qp), np.int32)
+    assert np.all(np.diff(q) >= 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(finite_f32, min_size=2, max_size=100),
+       st.integers(min_value=2, max_value=8))
+def test_prop_more_bits_no_worse(vals, bits):
+    x = jnp.asarray(np.array(vals, np.float32))
+    lo = compute_qparams(x, bits=bits)
+    hi = compute_qparams(x, bits=bits + 4)
+    err_lo = float(jnp.mean((dequantize(quantize(x, lo), lo) - x) ** 2))
+    err_hi = float(jnp.mean((dequantize(quantize(x, hi), hi) - x) ** 2))
+    assert err_hi <= err_lo + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=64))
+def test_prop_quantize_jit_consistent(n):
+    x = jnp.asarray(np.random.RandomState(n).randn(n).astype(np.float32))
+    qp = compute_qparams(x)
+    eager = quantize(x, qp)
+    jitted = jax.jit(quantize)(x, qp)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))

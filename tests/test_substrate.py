@@ -1,0 +1,291 @@
+"""Training-substrate tests: optimizer, data, checkpointing, fault
+tolerance, gradient compression, QAT, trainer loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import ImagePipeline, Prefetcher, TokenPipeline
+from repro.distributed.checkpoint import (CheckpointManager, latest_step,
+                                          restore_checkpoint,
+                                          save_checkpoint)
+from repro.distributed.ft import (HeartbeatMonitor, TrainSupervisor,
+                                  WorkerFailure, plan_elastic_mesh)
+from repro.train.grad_compress import (compress_with_feedback,
+                                       compressed_allreduce_bytes,
+                                       init_error_feedback)
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optim import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule)
+from repro.train.qat import make_qat_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ----------------------------- optimizer -----------------------------------
+
+def _quad_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+
+
+def test_adamw_converges_on_quadratic():
+    p = _quad_params()
+    opt = adamw_init(p)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(200):
+        g = jax.grad(loss)(p)
+        p, opt, _ = adamw_update(g, opt, p, cfg)
+    assert float(loss(p)) < 1e-3
+    assert int(opt.step) == 200
+
+
+def test_grad_clip_bounds_norm():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2)
+                         for x in jax.tree_util.tree_leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1.0, abs=1e-6)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(lr(jnp.int32(55))) == pytest.approx(0.5, abs=0.01)
+
+
+# ------------------------------- data ---------------------------------------
+
+def test_token_pipeline_deterministic_and_rank_disjoint():
+    p0 = TokenPipeline(vocab=64, seq_len=16, batch=4, seed=1, rank=0, world=2)
+    p0b = TokenPipeline(vocab=64, seq_len=16, batch=4, seed=1, rank=0, world=2)
+    p1 = TokenPipeline(vocab=64, seq_len=16, batch=4, seed=1, rank=1, world=2)
+    b0, b0b, b1 = p0.batch_at(5), p0b.batch_at(5), p1.batch_at(5)
+    np.testing.assert_array_equal(b0["tokens"], b0b["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+
+
+def test_image_pipeline_learnable_signal():
+    p = ImagePipeline(img_res=16, batch=8, n_classes=3, seed=0)
+    b = p.batch_at(0)
+    assert b["image"].shape == (8, 16, 16, 3)
+    assert set(np.unique(b["label"])) <= {0, 1, 2}
+
+
+def test_prefetcher_yields_in_order():
+    pipe = TokenPipeline(vocab=16, seq_len=4, batch=2, seed=3)
+    pf = Prefetcher(iter(pipe), depth=2)
+    got = next(pf)
+    np.testing.assert_array_equal(got["tokens"], pipe.batch_at(0)["tokens"])
+    got2 = next(pf)
+    np.testing.assert_array_equal(got2["tokens"], pipe.batch_at(1)["tokens"])
+    pf.close()
+
+
+# ----------------------------- checkpoint -----------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(6.0).reshape(2, 3), "opt": {"m": jnp.ones(3)},
+            "step": jnp.int32(7)}
+    save_checkpoint(tmp_path, 42, tree, metadata={"note": "hi"})
+    restored, step, meta = restore_checkpoint(tmp_path, tree)
+    assert step == 42 and meta["note"] == "hi"
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["step"].dtype == jnp.int32
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    assert latest_step(tmp_path) == 4
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert kept == ["step_000000003", "step_000000004"]
+
+
+def test_checkpoint_restore_to_different_sharding(tmp_path):
+    """Elastic restart: leaves restore onto any current-mesh sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tree = {"w": jnp.arange(8.0)}
+    save_checkpoint(tmp_path, 1, tree)
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored, _, _ = restore_checkpoint(tmp_path, tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_checkpoint_manager_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, every=2, async_save=True)
+    tree = {"x": jnp.ones(4)}
+    assert not mgr.maybe_save(1, tree)
+    assert mgr.maybe_save(2, tree)
+    mgr.wait()
+    assert latest_step(tmp_path) == 2
+
+
+# -------------------------- fault tolerance ----------------------------------
+
+def test_heartbeat_detects_dead_and_straggler():
+    mon = HeartbeatMonitor(n_ranks=4, timeout_s=5.0, straggler_factor=2.0)
+    now = 100.0
+    for r in range(4):
+        mon.beat(r, step_time_s=1.0 if r != 2 else 5.0, now=now)
+    # everyone beat at t=100 → all alive at t=103
+    assert mon.dead_ranks(now=103.0) == []
+    mon.beat(0, now=103.0)
+    # at t=106 only rank 0 (last beat 103) is within the 5 s timeout
+    assert mon.dead_ranks(now=106.0) == [1, 2, 3]
+    assert mon.stragglers() == [2]
+    assert 2 not in mon.healthy_ranks()
+
+
+def test_plan_elastic_mesh_shrinks_data_axis():
+    assert plan_elastic_mesh(256, model_parallel=16) == (16, 16)
+    assert plan_elastic_mesh(240, model_parallel=16) == (15, 16)
+    assert plan_elastic_mesh(8, model_parallel=16) == (1, 8)
+
+
+def test_supervisor_restart_is_bit_exact(tmp_path):
+    """Training with injected failures must produce the same final state
+    as an uninterrupted run (deterministic data keyed by step)."""
+
+    def make_step(fail_at=frozenset()):
+        fired = set()
+
+        def step_fn(state, step):
+            if step in fail_at and step not in fired:
+                fired.add(step)
+                raise WorkerFailure(f"node died at {step}")
+            new = {"w": state["w"] + 0.5 ** (step + 1)}
+            return new, {"w": float(new["w"])}
+        return step_fn
+
+    clean_sup = TrainSupervisor(str(tmp_path / "clean"), ckpt_every=1)
+    clean, _ = clean_sup.run({"w": jnp.float32(0.0)}, make_step(), 8)
+
+    faulty_sup = TrainSupervisor(str(tmp_path / "faulty"), ckpt_every=1)
+    faulty, hist = faulty_sup.run({"w": jnp.float32(0.0)},
+                                  make_step(fail_at={3, 6}), 8)
+    assert float(clean["w"]) == pytest.approx(float(faulty["w"]), abs=1e-7)
+
+
+# ------------------------- gradient compression ------------------------------
+
+def test_error_feedback_preserves_long_run_average():
+    """Sum of transmitted grads ≈ sum of true grads (EF property)."""
+    rng = np.random.RandomState(0)
+    grads = [{"w": jnp.asarray(rng.randn(64).astype(np.float32))}
+             for _ in range(50)]
+    err = init_error_feedback(grads[0])
+    sent_sum = jnp.zeros(64)
+    true_sum = jnp.zeros(64)
+    for g in grads:
+        sent, err = compress_with_feedback(g, err)
+        sent_sum = sent_sum + sent["w"]
+        true_sum = true_sum + g["w"]
+    resid = float(jnp.max(jnp.abs(sent_sum - true_sum)))
+    # leftover residual is bounded by one quantization step
+    assert resid < 0.05
+
+
+def test_compression_rate_is_4x():
+    params = {"w": jnp.zeros((1024,)), "b": jnp.zeros((8,))}
+    fp, comp = compressed_allreduce_bytes(params)
+    assert fp == 1032 * 4
+    assert comp < fp / 3
+
+
+def test_sgd_with_compression_still_converges():
+    p = {"w": jnp.array([4.0, -3.0])}
+    err = init_error_feedback(p)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(80):
+        g = jax.grad(loss)(p)
+        sent, err = compress_with_feedback(g, err)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.1 * b, p, sent)
+    assert float(loss(p)) < 1e-3
+
+
+# --------------------------------- QAT ---------------------------------------
+
+def test_qat_training_tracks_fp32(tmp_path):
+    """QAT on a tiny MLP: quantized loss should track fp32 loss closely."""
+    from repro.models import layers as L
+
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = {"l1": L.dense_init(k1, 8, 16), "l2": L.dense_init(k2, 16, 1)}
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(64, 8).astype(np.float32))
+    y = jnp.asarray((x[:, :1] * 2 - x[:, 1:2]))
+
+    def model_loss(p, batch, qctx=None):
+        h = L.dense(p["l1"], batch["x"], qctx=qctx, name="l1", act="relu")
+        out = L.dense(p["l2"], h, qctx=qctx, name="l2")
+        return jnp.mean((out - batch["y"]) ** 2)
+
+    batch = {"x": x, "y": y}
+    qat = make_qat_loss(model_loss)
+    vg = jax.jit(jax.value_and_grad(qat))
+    p = params
+    for _ in range(150):
+        l, g = vg(p, batch)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+    fp32_after = float(model_loss(p, batch))
+    qat_after = float(qat(p, batch))
+    assert qat_after < 0.1                      # QAT converged
+    assert abs(fp32_after - qat_after) < 0.05   # lattice ≈ fp32 behaviour
+
+
+# ------------------------------- trainer -------------------------------------
+
+def test_trainer_end_to_end_with_ckpt_and_accum(tmp_path):
+    from repro.models import layers as L
+
+    key = jax.random.PRNGKey(2)
+    params = {"l1": L.dense_init(key, 4, 8),
+              "l2": L.dense_init(jax.random.fold_in(key, 1), 8, 2)}
+
+    def loss(p, batch):
+        h = L.dense(p["l1"], batch["x"], act="relu", name="l1")
+        logits = L.dense(p["l2"], h, name="l2")
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], -1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    rng = np.random.RandomState(3)
+
+    def data():
+        step = 0
+        while True:
+            x = rng.randn(4, 8, 4).astype(np.float32)   # accum=4 microbatches
+            y = (x.sum(-1) > 0).astype(np.int32)
+            yield {"x": x, "y": y}
+            step += 1
+
+    cfg = TrainerConfig(n_steps=12, lr=0.05, warmup=2, grad_accum=4,
+                        ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0)
+    tr = Trainer(loss, params, cfg)
+    hist = tr.fit(data())
+    assert len(hist) == 12
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert latest_step(tmp_path) == 10
+    # restore resumes from the checkpoint
+    tr2 = Trainer(loss, params, cfg)
+    start = tr2.maybe_restore()
+    assert start == 10

@@ -1,0 +1,160 @@
+"""Vision model-family tests (reduced configs, CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import candidate_partition_points
+from repro.models import legacy, resnet, vit
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY_VIT = vit.ViTConfig(name="tiny-vit", img_res=32, patch=8, n_layers=2,
+                         d_model=32, n_heads=4, d_ff=64, n_classes=10,
+                         remat=False)
+TINY_DEIT = vit.ViTConfig(name="tiny-deit", img_res=32, patch=8, n_layers=2,
+                          d_model=32, n_heads=4, d_ff=64, n_classes=10,
+                          distill_token=True, remat=False)
+TINY_RESNET = resnet.ResNetConfig(name="tiny-resnet", depths=(1, 1, 1, 1),
+                                  width=8, bottleneck=True, n_classes=10,
+                                  img_res=32)
+TINY_BASIC = resnet.ResNetConfig(name="tiny-basic", depths=(1, 1, 1, 1),
+                                 width=8, bottleneck=False, n_classes=10,
+                                 img_res=32)
+
+
+def _img(batch=2, res=32, seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).rand(batch, res, res, 3).astype(np.float32))
+
+
+@pytest.mark.parametrize("cfg", [TINY_VIT, TINY_DEIT])
+def test_vit_forward_shapes(cfg):
+    p = vit.init_vit(jax.random.PRNGKey(0), cfg)
+    logits = vit.forward(p, _img(res=cfg.img_res), cfg)
+    assert logits.shape == (2, cfg.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_vit_param_count_formula():
+    for cfg in (TINY_VIT, TINY_DEIT):
+        p = vit.init_vit(jax.random.PRNGKey(1), cfg)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(p))
+        assert n == cfg.param_count(), (cfg.name, n, cfg.param_count())
+
+
+def test_vit_loss_decreases():
+    cfg = TINY_VIT
+    p = vit.init_vit(jax.random.PRNGKey(2), cfg)
+    batch = {"image": _img(4, cfg.img_res),
+             "label": jnp.arange(4, dtype=jnp.int32) % cfg.n_classes}
+    vg = jax.jit(jax.value_and_grad(lambda p: vit.cls_loss(p, batch, cfg)))
+    l0, g = vg(p)
+    for _ in range(5):
+        l, g = vg(p)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.5 * b, p, g)
+    assert float(vg(p)[0]) < float(l0)
+
+
+def test_vit_candidates_are_block_boundaries():
+    g = vit.make_graph(TINY_VIT, batch=1)
+    cands = {c.name for c in candidate_partition_points(g)}
+    assert {"patch", "blk0/ffn", "blk1/ffn", "head"} <= cands
+    assert "blk0/add1" not in cands
+
+
+def test_vit_collab_roundtrip():
+    from repro.core.collab import CollaborativeEngine
+    cfg = TINY_VIT
+    p = vit.init_vit(jax.random.PRNGKey(3), cfg)
+    m = vit.make_segments(p, cfg)
+    m.verify_alignment()
+    x = _img(1, cfg.img_res, seed=4)
+    truth = m.full_apply(x)
+    ref = vit.forward(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(truth), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    got, rec = CollaborativeEngine(m, "blk0/ffn").infer(x)
+    rel = float(jnp.linalg.norm(got - truth) / jnp.linalg.norm(truth))
+    assert rel < 0.2 and rec.precision == "int8"
+
+
+@pytest.mark.parametrize("cfg", [TINY_RESNET, TINY_BASIC])
+def test_resnet_forward_and_segments(cfg):
+    p = resnet.init_resnet(jax.random.PRNGKey(0), cfg)
+    logits = resnet.forward(p, _img(res=cfg.img_res), cfg)
+    assert logits.shape == (2, cfg.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    m = resnet.make_segments(p, cfg)
+    m.verify_alignment()
+    out = m.full_apply(_img(1, cfg.img_res))
+    ref = resnet.forward(p, _img(1, cfg.img_res), cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_resnet152_graph_structure():
+    cfg = resnet.ResNetConfig(name="resnet-152", depths=(3, 8, 36, 3))
+    g = resnet.make_graph(cfg, batch=1)
+    cands = {c.name for c in candidate_partition_points(g)}
+    # stage boundaries are candidates; 50 blocks total
+    n_blocks = sum(cfg.depths)
+    assert n_blocks == 50
+    block_cands = [c for c in cands if c.endswith("/body")]
+    assert len(block_cands) == n_blocks
+    # published "11.5 G" is GMACs; we count FLOPs = 2*MACs → ~23 GFLOPs
+    assert 20e9 < g.total_flops() < 26e9
+    # ~60M params
+    assert 55e6 < g.total_param_elems() < 65e6
+
+
+def test_resnet18_graph_matches_published_size():
+    cfg = resnet.ResNetConfig(name="resnet-18", depths=(2, 2, 2, 2),
+                              bottleneck=False)
+    g = resnet.make_graph(cfg, batch=1)
+    assert 10e6 < g.total_param_elems() < 13e6       # ~11.7M
+    assert 3e9 < g.total_flops() < 4.5e9             # ~3.6 GFLOPs
+
+
+def test_alexnet_graph_and_forward():
+    g = legacy.alexnet_graph()
+    assert 55e6 < g.total_param_elems() < 65e6       # ~61M params
+    # ungrouped (single-tower) AlexNet: ~1.13 GMACs → ~2.3 GFLOPs
+    assert 2.0e9 < g.total_flops() < 2.6e9
+    p = legacy.init_alexnet(jax.random.PRNGKey(0))
+    x = _img(1, 227)
+    y = legacy.alexnet_forward(p, x)
+    assert y.shape == (1, 1000) and bool(jnp.all(jnp.isfinite(y)))
+    m = legacy.alexnet_segments(p)
+    m.verify_alignment()
+    np.testing.assert_allclose(np.asarray(m.full_apply(x)), np.asarray(y),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vgg16_graph_counts():
+    g = legacy.vgg16_graph()
+    assert 130e6 < g.total_param_elems() < 145e6     # ~138M params
+    assert 28e9 < g.total_flops() < 34e9             # ~31 GFLOPs
+    cands = {c.name for c in candidate_partition_points(g)}
+    assert "conv1_2" in cands                        # paper's best cut
+
+
+def test_googlenet_graph_and_candidates():
+    g = legacy.googlenet_graph()
+    assert 5e6 < g.total_param_elems() < 8e6         # ~6.8M params
+    assert 2.5e9 < g.total_flops() < 4e9             # ~3 GFLOPs
+    cands = {c.name for c in candidate_partition_points(g)}
+    assert "conv2" in cands                          # paper's best cut
+    # inception interiors excluded; fused concat points are candidates
+    assert "inc3a/b2b" not in cands
+    assert "inc3a/b4" in cands
+    # all 9 inception boundaries
+    assert sum(1 for c in cands if c.endswith("/b4")) == 9
+
+
+def test_googlenet_forward_small():
+    p = legacy.init_googlenet(jax.random.PRNGKey(0))
+    y = legacy.googlenet_forward(p, _img(1, 224))
+    assert y.shape == (1, 1000) and bool(jnp.all(jnp.isfinite(y)))
+    m = legacy.googlenet_segments(p)
+    m.verify_alignment()
