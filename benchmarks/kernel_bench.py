@@ -20,11 +20,12 @@ from repro.kernels.ref import int8_matmul_ref
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)                                  # compile
+    jax.block_until_ready(fn(*args))           # compile + drain the queue
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        # fence every iteration: async dispatch would otherwise overlap
+        # device work with the host loop and under-report per-iter time
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters
 
 

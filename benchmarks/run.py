@@ -45,6 +45,13 @@ def main() -> None:
     section("optimized_decode_serving", optimized_decode.summarize,
             lambda r: f"cells={len(r)}")
 
+    from benchmarks import collab_decode
+    section("collab_decode", collab_decode.run,
+            lambda r: f"us_per_token={r['incremental']['us_per_token']:.0f};"
+                      f"bytes_per_token="
+                      f"{r['incremental']['bytes_per_token']:.0f};"
+                      f"speedup={r['speedup_wall']:.1f}x")
+
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:

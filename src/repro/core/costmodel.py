@@ -18,9 +18,10 @@ from typing import Dict, Mapping, Optional
 
 from repro.core.graph import LayerGraph, Node
 
-__all__ = ["DeviceModel", "Channel", "Profile",
+__all__ = ["DeviceModel", "Channel", "Profile", "PhaseBreakdown",
            "EDGE_TX2_CLASS", "CLOUD_TITANXP_CLASS", "CLOUD_TPU_V5E_CHIP",
-           "layer_time", "subgraph_time", "tpu_v5e_pod"]
+           "layer_time", "subgraph_time", "tpu_v5e_pod",
+           "collab_decode_step_time"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +84,42 @@ class Channel:
 
 # measured per-layer seconds, node name -> time
 Profile = Mapping[str, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseBreakdown:
+    """Per-phase latency split of a collaborative serving request:
+    one-time prefill, per-token decode compute (edge + cloud), and the
+    wireless transfer of the boundary blob.  Mirrors the phase fields
+    ``ServeStats`` measures, so predictions and measurements line up."""
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    channel_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.prefill_s + self.decode_s + self.channel_s
+
+
+def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
+                            blob_bytes: float, edge: DeviceModel,
+                            cloud: DeviceModel, channel: Channel,
+                            return_bytes: float = 4.0) -> PhaseBreakdown:
+    """Predicted per-token cost of *incremental* collaborative decode.
+
+    With split KV caches, each generated token runs only the new-token
+    slice through the edge prefix (INT8) and the cloud suffix (FP32) and
+    ships a single [B, 1, D] quantized boundary delta — so the wire term
+    is O(1) in sequence length, which is what makes transmission stop
+    dominating (JointDNN's observation applied per token).  Each step is
+    a full round trip: the uplink delta plus the cloud→edge return of
+    the sampled tokens (``return_bytes``), each paying the channel RTT."""
+    edge_s = edge_flops / edge.peak_ops_int8 + edge.launch_overhead_s
+    cloud_s = (cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
+               + cloud.launch_overhead_s)
+    channel_s = (channel.transfer_time(blob_bytes)
+                 + channel.transfer_time(return_bytes))
+    return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s)
 
 
 def layer_time(node: Node, dev: DeviceModel, *, precision: str,

@@ -75,7 +75,10 @@ def main(argv=None):
     outs = eng.generate(prompts, max_new_tokens=args.max_new)
     dt = time.perf_counter() - t0
     print(f"collaborative: {dt:.2f}s, int8 wire bytes "
-          f"{eng.stats.transmitted_bytes / 1e3:.1f}KB, simulated channel "
+          f"{eng.stats.transmitted_bytes / 1e3:.1f}KB "
+          f"({eng.stats.prefill_bytes / 1e3:.1f}KB prefill + "
+          f"{eng.stats.bytes_per_decode_token():.0f} B/token incremental "
+          f"decode), simulated channel "
           f"time {eng.stats.channel_latency_s:.2f}s")
     print("first output:", outs[0])
 

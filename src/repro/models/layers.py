@@ -194,11 +194,17 @@ def rope_table(seq_len: int, head_dim: int, *, base: float = 10000.0,
 
 
 def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
-    """x: [B, S, H, D]; cos/sin: [S, D/2] (or broadcastable)."""
+    """x: [B, S, H, D]; cos/sin: [S, D/2] shared across the batch, or
+    [B, S, D/2] when every sequence sits at its own position (per-slot
+    decode in the continuous-batching scheduler)."""
     half = x.shape[-1] // 2
     x1, x2 = x[..., :half], x[..., half:]
-    c = cos[None, :, None, :]
-    s = sin[None, :, None, :]
+    if cos.ndim == 3:
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    else:
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
     return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
 
 
@@ -253,10 +259,19 @@ def _sdpa(qh: jax.Array, kh: jax.Array, vh: jax.Array, *,
         logits = jax.lax.with_sharding_constraint(logits, P(*score_pspec))
     if causal:
         sq, sk = qh.shape[1], kh.shape[1]
-        qpos = jnp.arange(sq)[:, None] + q_offset
-        kpos = jnp.arange(sk)[None, :]
-        mask = kpos <= qpos
-        logits = jnp.where(mask[None, None], logits, jnp.finfo(logits.dtype).min)
+        if jnp.ndim(q_offset) == 1:
+            # per-batch offsets [B]: each slot decodes at its own position
+            qpos = jnp.arange(sq)[None, :, None] + q_offset[:, None, None]
+            kpos = jnp.arange(sk)[None, None, :]
+            mask = kpos <= qpos                       # [B, Sq, Skv]
+            logits = jnp.where(mask[:, None], logits,
+                               jnp.finfo(logits.dtype).min)
+        else:
+            qpos = jnp.arange(sq)[:, None] + q_offset
+            kpos = jnp.arange(sk)[None, :]
+            mask = kpos <= qpos
+            logits = jnp.where(mask[None, None], logits,
+                               jnp.finfo(logits.dtype).min)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     probs = probs.astype(vh.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
@@ -286,12 +301,23 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     kh = dense(p["wk"], x, qctx=qctx, name=f"{name}/k").reshape(b, s, n_kv, hd)
     vh = dense(p["wv"], x, qctx=qctx, name=f"{name}/v").reshape(b, s, n_kv, hd)
 
+    # vector cache_index [B] = per-slot decode positions (continuous
+    # batching); requires the single-token decode shape.
+    vec_index = (cache_index is not None and jnp.ndim(cache_index) == 1)
+    assert not vec_index or s == 1, "per-slot cache_index needs S=1 decode"
+
     q_offset = 0
     if rope is not None:
         cos, sin = rope
         if kv_cache is not None and cache_index is not None:
-            cos_q = jax.lax.dynamic_slice_in_dim(cos, cache_index, s, axis=0)
-            sin_q = jax.lax.dynamic_slice_in_dim(sin, cache_index, s, axis=0)
+            if vec_index:
+                cos_q = jnp.take(cos, cache_index, axis=0)[:, None]  # [B,1,·]
+                sin_q = jnp.take(sin, cache_index, axis=0)[:, None]
+            else:
+                cos_q = jax.lax.dynamic_slice_in_dim(cos, cache_index, s,
+                                                     axis=0)
+                sin_q = jax.lax.dynamic_slice_in_dim(sin, cache_index, s,
+                                                     axis=0)
         else:
             cos_q, sin_q = cos[:s], sin[:s]
         qh = apply_rope(qh, cos_q, sin_q)
@@ -308,10 +334,15 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
         else:
             k_w = kh.astype(kv_cache["k"].dtype)
             v_w = vh.astype(kv_cache["v"].dtype)
-        k_all = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["k"], k_w, cache_index, axis=1)
-        v_all = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["v"], v_w, cache_index, axis=1)
+        if vec_index:
+            b_idx = jnp.arange(b)
+            k_all = kv_cache["k"].at[b_idx, cache_index].set(k_w[:, 0])
+            v_all = kv_cache["v"].at[b_idx, cache_index].set(v_w[:, 0])
+        else:
+            k_all = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k_w, cache_index, axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v_w, cache_index, axis=1)
         new_cache = {"k": k_all, "v": v_all}
         if kv_scales is not None:
             kh = k_all.astype(x.dtype) * ks.astype(x.dtype)[None, None, :,

@@ -212,56 +212,49 @@ def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: LMConfig,
 
 
 def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None,
-               *, quantized: bool = False) -> Dict[str, jax.Array]:
+               *, quantized: bool = False,
+               layers: Optional[int] = None) -> Dict[str, jax.Array]:
     """``quantized=True``: INT8 cache with per-(layer, kv-head) symmetric
-    scales (calibrated off-line in deployment; init'd to a generic RMS)."""
+    scales (calibrated off-line in deployment; init'd to a generic RMS).
+
+    ``layers`` overrides the leading layer axis — cut-aware serving gives
+    the edge prefix and the cloud suffix each their own cache covering
+    only their block sub-range."""
+    n_layers = cfg.n_layers if layers is None else layers
     if quantized:
-        shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+        shape = (n_layers, batch, max_len, cfg.n_kv, cfg.hd)
         return {"k": jnp.zeros(shape, jnp.int8),
                 "v": jnp.zeros(shape, jnp.int8),
-                "k_scale": jnp.full((cfg.n_layers, cfg.n_kv), 0.05,
+                "k_scale": jnp.full((n_layers, cfg.n_kv), 0.05,
                                     jnp.float32),
-                "v_scale": jnp.full((cfg.n_layers, cfg.n_kv), 0.05,
+                "v_scale": jnp.full((n_layers, cfg.n_kv), 0.05,
                                     jnp.float32)}
     dtype = dtype or cfg.dtype
-    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    shape = (n_layers, batch, max_len, cfg.n_kv, cfg.hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def prefill(params: Params, tokens: jax.Array, cfg: LMConfig, *,
-            cache: Dict[str, jax.Array],
-            qctx: Optional[QuantCtx] = None,
-            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Process the full prompt; returns (last-token logits, filled cache)."""
-    b, s = tokens.shape
-    max_len = cache["k"].shape[2]
-    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
-    rope = L.rope_table(max_len, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
-    idx = jnp.int32(0)
+def run_blocks(blocks: Params, x: jax.Array, cfg: LMConfig, *,
+               rope: Tuple[jax.Array, jax.Array],
+               cache: Optional[Dict[str, jax.Array]] = None,
+               cache_index: Optional[jax.Array] = None,
+               qctx: Optional[QuantCtx] = None,
+               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Scan a *sub-range* of stacked decoder blocks over hidden states.
 
-    def body(x, scan_in):
-        bp, c = scan_in
-        x, new_c, _ = block_apply(bp, x, cfg, rope=rope, cache=c,
-                                  cache_index=idx, qctx=qctx)
-        return x, new_c
+    This is the cut-aware workhorse shared by the monolithic serving path
+    and the collaborative engines: the edge prefix and the cloud suffix
+    each call it on their own block slice + KV cache.  ``cache_index``
+    may be a scalar (uniform position) or a [B] vector of per-slot
+    positions.  INT8 caches (``k_scale`` entries) are handled uniformly.
+    """
+    if cache is None:
+        def body_nc(x, bp):
+            y, _, _ = block_apply(bp, x, cfg, rope=rope, qctx=qctx)
+            return y, None
 
-    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
-                                unroll=cfg.scan_unroll)
-    x = L.rmsnorm(params["final_norm"], x[:, -1:])
-    logits = L.dense(params["lm_head"], x, name="lm_head")
-    return logits[:, 0], new_cache
-
-
-def decode_step(params: Params, token: jax.Array, cache: Dict[str, jax.Array],
-                cache_index: jax.Array, cfg: LMConfig, *,
-                qctx: Optional[QuantCtx] = None,
-                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One autoregressive step: token [B] int32 → logits [B, V].
-    Handles both bf16 and INT8-quantized caches (scale entries ride
-    along in the cache dict and are sliced per layer by the scan)."""
-    max_len = cache["k"].shape[2]
-    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
-    rope = L.rope_table(max_len, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
+        x, _ = jax.lax.scan(body_nc, x, blocks, unroll=cfg.scan_unroll)
+        return x, None
 
     def body(x, scan_in):
         bp, c = scan_in
@@ -276,11 +269,62 @@ def decode_step(params: Params, token: jax.Array, cache: Dict[str, jax.Array],
             new_c = dict(new_c, k_scale=scales[0], v_scale=scales[1])
         return x, new_c
 
-    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
+    x, new_cache = jax.lax.scan(body, x, (blocks, cache),
                                 unroll=cfg.scan_unroll)
+    return x, new_cache
+
+
+def lm_head(params: Params, x: jax.Array) -> jax.Array:
+    """Final-norm + untied head over hidden states [B, S, D]."""
     x = L.rmsnorm(params["final_norm"], x)
-    logits = L.dense(params["lm_head"], x, name="lm_head")
+    return L.dense(params["lm_head"], x, name="lm_head")
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: LMConfig, *,
+            cache: Dict[str, jax.Array],
+            qctx: Optional[QuantCtx] = None,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Process the full prompt; returns (last-token logits, filled cache)."""
+    b, s = tokens.shape
+    max_len = cache["k"].shape[2]
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    rope = L.rope_table(max_len, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
+    x, new_cache = run_blocks(params["blocks"], x, cfg, rope=rope,
+                              cache=cache, cache_index=jnp.int32(0),
+                              qctx=qctx)
+    logits = lm_head(params, x[:, -1:])
     return logits[:, 0], new_cache
+
+
+def decode_step(params: Params, token: jax.Array, cache: Dict[str, jax.Array],
+                cache_index: jax.Array, cfg: LMConfig, *,
+                qctx: Optional[QuantCtx] = None,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One autoregressive step: token [B] int32 → logits [B, V].
+    ``cache_index`` is a scalar (uniform position) or a [B] vector of
+    per-slot positions (continuous batching).  Handles both bf16 and
+    INT8-quantized caches (scale entries ride along in the cache dict
+    and are sliced per layer by the scan)."""
+    max_len = cache["k"].shape[2]
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+    rope = L.rope_table(max_len, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
+    x, new_cache = run_blocks(params["blocks"], x, cfg, rope=rope,
+                              cache=cache, cache_index=cache_index,
+                              qctx=qctx)
+    logits = lm_head(params, x)
+    return logits[:, 0], new_cache
+
+
+def split_blocks(params: Params, cfg: LMConfig, cut_layer: int,
+                 ) -> Tuple[Params, Params]:
+    """Split the stacked block params at the paper's partition point:
+    (edge prefix = blocks[0..cut], cloud suffix = blocks[cut+1..L))."""
+    assert 0 <= cut_layer < cfg.n_layers
+
+    def take(lo, hi):
+        return jax.tree_util.tree_map(lambda v: v[lo:hi], params["blocks"])
+
+    return take(0, cut_layer + 1), take(cut_layer + 1, cfg.n_layers)
 
 
 # ---------------------------------------------------------------------------

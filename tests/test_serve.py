@@ -45,7 +45,9 @@ def test_engine_batches_multiple_calls(params):
     outs = eng.generate(_prompts(5), max_new_tokens=3)
     assert len(outs) == 5 and all(len(o) == 3 for o in outs)
     assert eng.stats.prefill_calls == 3          # ceil(5/2)
-    assert eng.stats.decode_steps == 9
+    # each wave needs max_new-1 decode steps: the first output token
+    # comes from its prefill, and slots retire before the wasted step
+    assert eng.stats.decode_steps == 6
 
 
 def test_collaborative_engine_close_to_cloud_only(params):
