@@ -36,6 +36,9 @@ def main() -> None:
     section("kernel_int8_matmul", kernel_bench.run,
             lambda r: f"int8_vs_fp32={r['t_int8_us'] / r['t_f32_us']:.2f};"
                       f"rel_err={r['rel_err']:.4f}")
+    section("kernel_paged_attention", kernel_bench.run_paged,
+            lambda r: f"speedup@4096={r['paged_speedup_at_4096']:.1f}x;"
+                      f"kernel_err={r['kernel_ref_err']:.1e}")
     section("roofline_16x16", lambda: roofline.run(mesh="16x16"),
             lambda r: f"cells={len(r)}")
     section("roofline_multipod", lambda: roofline.run(mesh="multipod"),
@@ -51,6 +54,13 @@ def main() -> None:
                       f"bytes_per_token="
                       f"{r['incremental']['bytes_per_token']:.0f};"
                       f"speedup={r['speedup_wall']:.1f}x")
+
+    from benchmarks import paged_decode
+    section("paged_decode", paged_decode.run,
+            lambda r: ";".join(
+                f"{row['max_len']}:{row['speedup']:.1f}x/"
+                f"{row['cache_bytes_ratio']:.0f}xB"
+                for row in r["sweep"]))
 
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")

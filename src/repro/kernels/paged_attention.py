@@ -1,0 +1,240 @@
+"""Pallas TPU kernel: paged flash-decode attention over an INT8 block-table
+KV cache.
+
+Serving-side counterpart of ``int8_matmul``: where that kernel keeps the
+paper's edge GEMMs at 1 B/elem, this one keeps the *KV cache* at 1 B/elem
+end-to-end.  The cache is a pool of fixed-size pages
+``[n_pages, page_size, n_kv, head_dim]`` (int8, or fp for the unquantized
+variant); each sequence owns a row of a block table mapping its logical
+page index to a physical page, so HBM is allocated on demand instead of
+``max_len`` up front.
+
+One decode step = one grid cell per (batch row, kv head, logical page):
+
+  grid = (B, n_kv, pages_per_seq), pages innermost ("arbitrary" — the
+  online-softmax state m/l/acc lives in VMEM scratch across the page axis)
+
+The block table and per-row lengths ride in scalar-prefetch SMEM so the
+K/V BlockSpec index maps can redirect the page DMA:
+
+  index_map = lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)
+
+INT8 K/V are dequantized *inside* the QK/AV loops — per-(layer, kv-head)
+symmetric scales (optionally calibrated per slot, so shaped [B, n_kv])
+sit in SMEM and multiply the page tile right after load, so the MXU sees
+f32 while HBM only ever streams 1 B/elem.  GQA runs grouped: the q heads
+sharing a kv head form the sublane dim of the score tile.
+
+Off-TPU there are two fallbacks, mirroring ``ops.int8_matmul``:
+``interpret=True`` runs the very same kernel through the Pallas
+interpreter (used by the parity tests), while the serving engines default
+to ``paged_attention_ref`` — an XLA implementation of identical math that
+is fast enough to benchmark on CPU.  ``paged_attention`` dispatches.
+
+VMEM residency per grid cell (defaults, page_size=64, hd=128, group=8):
+  K page  int8 [page_size, hd]   8 KiB      m, l  f32 [group, 1]
+  V page  int8 [page_size, hd]   8 KiB      acc   f32 [group, hd] 4 KiB
+all « 16 MiB; on real TPU prefer page_size a multiple of 32 (int8
+sublane) and group padded to 8 — the interpret/ref paths accept any size.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import compiler_params
+
+__all__ = ["paged_attention", "paged_flash_decode", "paged_attention_ref"]
+
+# finite stand-in for -inf: (-1e30) - (-1e30) = 0 keeps exp() NaN-free on
+# fully-masked pages, where true -inf would poison the running max
+_MASKED = -1e30
+
+# module default for `paged_attention(impl=None)`; tests may override to
+# "pallas_interpret" to drive the real kernel through the model stack
+_DEFAULT_IMPL = "auto"
+
+
+def _kernel(bt_ref, len_ref,            # scalar-prefetch: block table, lens
+            q_ref, k_ref, v_ref,        # [1,1,G,hd], [1,P,1,hd], [1,P,1,hd]
+            ks_ref, vs_ref,             # (1,1) SMEM per-(row, kv-head) scale
+            o_ref,                      # [1,1,G,hd]
+            m_ref, l_ref, acc_ref,      # scratch: online-softmax state
+            *, page_size: int, sm_scale: float):
+    b, h, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _MASKED)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dequant on load: HBM streamed the page at 1 B/elem; the scale is a
+    # scalar broadcast fused into the VPU convert
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]   # [P, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale             # [G, hd]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, P]
+    pos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = pos < len_ref[b]                                     # [1, P]
+    s = jnp.where(valid, s, _MASKED)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit re-mask: on an all-masked page exp(s - m) would be exp(0)
+    w = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(w, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        w, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _norm_scales(scale: Optional[jax.Array], batch: int,
+                 n_kv: int) -> jax.Array:
+    """Broadcast per-cache scales to the kernel's [B, n_kv] layout.
+
+    Accepts None (fp pages: identity), [n_kv] (per-(layer, head) deploy
+    calibration) or [B, n_kv] (per-slot calibration at prefill)."""
+    if scale is None:
+        return jnp.ones((batch, n_kv), jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim == 1:
+        scale = jnp.broadcast_to(scale[None], (batch, n_kv))
+    return scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(
+    q: jax.Array,                  # [B, n_heads, hd]
+    k_pages: jax.Array,            # [n_pages, page_size, n_kv, hd] int8|fp
+    v_pages: jax.Array,
+    block_tables: jax.Array,       # [B, pages_per_seq] int32
+    lengths: jax.Array,            # [B] int32, # of valid KV entries
+    k_scale: Optional[jax.Array] = None,   # [n_kv] or [B, n_kv]
+    v_scale: Optional[jax.Array] = None,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """One flash-decode step over the paged cache → [B, n_heads, hd]."""
+    b, n_heads, hd = q.shape
+    _, page_size, n_kv, _ = k_pages.shape
+    pages_per_seq = block_tables.shape[1]
+    group = n_heads // n_kv
+    assert group * n_kv == n_heads, (n_heads, n_kv)
+
+    qg = q.reshape(b, n_kv, group, hd)
+    ks = _norm_scales(k_scale, b, n_kv)
+    vs = _norm_scales(v_scale, b, n_kv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_kv, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda b_, h, p, bt, ln: (b_, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b_, h, p, bt, ln: (bt[b_, p], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b_, h, p, bt, ln: (bt[b_, p], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h, p, bt, ln: (b_, h),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b_, h, p, bt, ln: (b_, h),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda b_, h, p, bt, ln: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),      # running max
+            pltpu.VMEM((group, 1), jnp.float32),      # running denominator
+            pltpu.VMEM((group, hd), jnp.float32),     # un-normalized out
+        ],
+    )
+    kernel = functools.partial(_kernel, page_size=page_size,
+                               sm_scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_pages, v_pages, ks, vs)
+    return out.reshape(b, n_heads, hd)
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Pure-XLA oracle for the kernel — same math, gather-based.
+
+    Also the production path off-TPU: it touches only the pages named in
+    the block table (HBM/DRAM traffic ∝ allocated pages, not max_len),
+    so the engines' CPU benchmarks measure the same asymptotics the TPU
+    kernel delivers."""
+    b, n_heads, hd = q.shape
+    _, page_size, n_kv, _ = k_pages.shape
+    group = n_heads // n_kv
+    span = block_tables.shape[1] * page_size
+
+    k = k_pages[block_tables].reshape(b, span, n_kv, hd).astype(jnp.float32)
+    v = v_pages[block_tables].reshape(b, span, n_kv, hd).astype(jnp.float32)
+    ks = _norm_scales(k_scale, b, n_kv)
+    vs = _norm_scales(v_scale, b, n_kv)
+    k = k * ks[:, None, :, None]
+    v = v * vs[:, None, :, None]
+
+    qg = q.reshape(b, n_kv, group, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, k)
+    mask = jnp.arange(span)[None, None, None, :] \
+        < lengths[:, None, None, None]
+    s = jnp.where(mask, s, _MASKED)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p, v)
+    return out.reshape(b, n_heads, hd).astype(q.dtype)
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    *,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Dispatching front door: Pallas kernel on TPU, XLA ref elsewhere.
+
+    ``impl``: "auto" (default), "pallas", "pallas_interpret", or "ref".
+    """
+    impl = impl or _DEFAULT_IMPL
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   lengths, k_scale, v_scale)
+    return paged_flash_decode(q, k_pages, v_pages, block_tables, lengths,
+                              k_scale, v_scale,
+                              interpret=(impl == "pallas_interpret"))

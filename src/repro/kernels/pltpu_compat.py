@@ -1,0 +1,11 @@
+"""Version shim shared by the Pallas kernels: the TPU compiler-params
+class is ``pltpu.TPUCompilerParams`` on jax<=0.4.x and
+``pltpu.CompilerParams`` afterwards."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -286,6 +286,9 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
               q_chunk: Optional[int] = None,
               kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
               score_pspec: Optional[tuple] = None,
+              block_tables: Optional[jax.Array] = None,
+              calibrate_kv: bool = False,
+              kv_lengths: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """GQA attention.  With ``kv_cache`` given, x is the new-token slice
     (decode: S=1); cache is updated at ``cache_index`` and attention runs
@@ -294,7 +297,21 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     ``kv_scales`` (k_scale, v_scale per kv head, [H]) enables the INT8
     KV cache: new entries are symmetrically quantized on write (paper
     Eq.1, zero-point-free) and dequantized on read — on TPU the convert
-    fuses into the QK/AV matmuls so the cache streams at 1 B/elem."""
+    fuses into the QK/AV matmuls so the cache streams at 1 B/elem.
+
+    A *paged* cache (``"k_pages"`` key, see ``transformer.init_cache``)
+    additionally takes ``block_tables`` [B, pages_per_seq] mapping each
+    row's logical pages to physical pages in the shared pool.  Writes
+    scatter into table-mapped pages; decode reads (S=1) go through the
+    paged flash-decode kernel, while prefill (S>1, cache rows empty)
+    attends over the just-computed K/V directly through ``_sdpa`` — the
+    reference einsum stays the fallback/oracle path.  With an INT8 page
+    pool, ``calibrate_kv=True`` (prefill) derives fresh per-(row, head)
+    symmetric scales from the prompt's K/V instead of reading the
+    ``k_scale``/``v_scale`` cache entries that decode steps replay.
+    ``kv_lengths`` [B] gives each row's true token count during a
+    bucket-padded prefill so padding positions cannot inflate the
+    calibrated ranges."""
     b, s, d = x.shape
     hd = p["wq"]["w"].shape[1] // n_heads
     qh = dense(p["wq"], x, qctx=qctx, name=f"{name}/q").reshape(b, s, n_heads, hd)
@@ -322,6 +339,17 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
             cos_q, sin_q = cos[:s], sin[:s]
         qh = apply_rope(qh, cos_q, sin_q)
         kh = apply_rope(kh, cos_q, sin_q)
+
+    if kv_cache is not None and "k_pages" in kv_cache:
+        assert block_tables is not None, "paged cache needs block_tables"
+        out, new_cache = _paged_cache_attention(
+            kv_cache, qh, kh, vh, block_tables=block_tables,
+            cache_index=cache_index, vec_index=vec_index,
+            calibrate_kv=calibrate_kv, kv_lengths=kv_lengths,
+            n_heads=n_heads, n_kv=n_kv, q_chunk=q_chunk, dtype=x.dtype)
+        out = out.reshape(b, s, n_heads * hd)
+        out = dense(p["wo"], out, qctx=qctx, name=f"{name}/o")
+        return out, new_cache
 
     new_cache = None
     if kv_cache is not None:
@@ -362,6 +390,92 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
                 q_chunk=q_chunk, score_pspec=score_pspec)
     out = out.reshape(b, s, n_heads * hd)
     out = dense(p["wo"], out, qctx=qctx, name=f"{name}/o")
+    return out, new_cache
+
+
+def _paged_cache_attention(cache: Dict[str, jax.Array], qh: jax.Array,
+                           kh: jax.Array, vh: jax.Array, *,
+                           block_tables: jax.Array,
+                           cache_index: Optional[jax.Array],
+                           vec_index: bool, calibrate_kv: bool,
+                           kv_lengths: Optional[jax.Array],
+                           n_heads: int, n_kv: int,
+                           q_chunk: Optional[int], dtype
+                           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Write new K/V into block-table pages, then attend.
+
+    qh/kh/vh: [B, S, H(, kv), D] post-RoPE.  Decode (S=1) reads back
+    through ``kernels.paged_attention``; prefill (S>1 into empty rows)
+    attends over the current tokens' (fake-quantized) K/V via ``_sdpa``.
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    b, s = kh.shape[:2]
+    page_size = cache["k_pages"].shape[1]
+    quantized = "k_scale" in cache
+
+    if quantized:
+        if calibrate_kv:
+            # per-slot Eq.(1) symmetric calibration from the prompt's
+            # own K/V range — [B, n_kv], replayed by every decode step.
+            # Bucket-padding positions are masked out of the reduction:
+            # their K/V (pad-token embeddings at tail RoPE phases) must
+            # not set a request's scale for its whole lifetime.
+            ak, av = jnp.abs(kh), jnp.abs(vh)
+            if kv_lengths is not None:
+                valid = (jnp.arange(s)[None, :]
+                         < kv_lengths[:, None])[:, :, None, None]
+                ak = jnp.where(valid, ak, 0.0)
+                av = jnp.where(valid, av, 0.0)
+            ks = jnp.maximum(jnp.max(ak, axis=(1, 3)), 1e-6) / 127.0
+            vs = jnp.maximum(jnp.max(av, axis=(1, 3)), 1e-6) / 127.0
+        else:
+            ks, vs = cache["k_scale"], cache["v_scale"]
+        k_w = jnp.clip(jnp.round(kh / ks[:, None, :, None]),
+                       -127, 127).astype(cache["k_pages"].dtype)
+        v_w = jnp.clip(jnp.round(vh / vs[:, None, :, None]),
+                       -127, 127).astype(cache["v_pages"].dtype)
+    else:
+        k_w = kh.astype(cache["k_pages"].dtype)
+        v_w = vh.astype(cache["v_pages"].dtype)
+
+    # logical position of every written token, [B, S]
+    if vec_index:
+        t = cache_index[:, None]
+    else:
+        t = jnp.broadcast_to(
+            (cache_index + jnp.arange(s))[None], (b, s))
+    page = jnp.take_along_axis(block_tables, t // page_size, axis=1)
+    off = t % page_size
+    k_pages = cache["k_pages"].at[page, off].set(k_w)
+    v_pages = cache["v_pages"].at[page, off].set(v_w)
+
+    new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+    if quantized:
+        new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+
+    if s == 1:
+        # flash-decode over the page pool (1 B/elem streamed, dequant
+        # inside the QK/AV loops); lengths include the token just written
+        vec = cache_index if vec_index else jnp.full((b,), cache_index)
+        out = paged_attention(qh[:, 0].astype(jnp.float32), k_pages,
+                              v_pages, block_tables, vec + 1,
+                              ks if quantized else None,
+                              vs if quantized else None)
+        return out[:, None].astype(dtype), new_cache
+
+    # prefill: rows are empty, so the causal context is exactly the
+    # current kh/vh — but read through the cache's lattice so prefill
+    # logits match what decode will later reconstruct from the pages
+    if quantized:
+        kh = k_w.astype(dtype) * ks[:, None, :, None].astype(dtype)
+        vh = v_w.astype(dtype) * vs[:, None, :, None].astype(dtype)
+    if n_kv != n_heads:
+        rep = n_heads // n_kv
+        kh = jnp.repeat(kh, rep, axis=2)
+        vh = jnp.repeat(vh, rep, axis=2)
+    out = _sdpa(qh, kh, vh, causal=True,
+                q_offset=0 if vec_index else cache_index, q_chunk=q_chunk)
     return out, new_cache
 
 

@@ -147,13 +147,17 @@ def block_apply(p: Params, x: jax.Array, cfg: LMConfig, *,
                 cache_index: Optional[jax.Array] = None,
                 qctx: Optional[QuantCtx] = None,
                 kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
+                block_tables: Optional[jax.Array] = None,
+                calibrate_kv: bool = False,
+                kv_lengths: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     x = _constrain(x, cfg)
     h, new_cache = L.attention(
         p["attn"], L.rmsnorm(p["ln1"], x), n_heads=cfg.n_heads,
         n_kv=cfg.n_kv, causal=True, rope=rope, kv_cache=cache,
         cache_index=cache_index, qctx=qctx, q_chunk=cfg.q_chunk,
-        kv_scales=kv_scales,
+        kv_scales=kv_scales, block_tables=block_tables,
+        calibrate_kv=calibrate_kv, kv_lengths=kv_lengths,
         score_pspec=cfg.score_pspec if cache is not None else None)
     # constrain the projection outputs too: the TP contraction's partial
     # sums then reduce-scatter straight into the sharded residual stream
@@ -213,14 +217,44 @@ def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: LMConfig,
 
 def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None,
                *, quantized: bool = False,
-               layers: Optional[int] = None) -> Dict[str, jax.Array]:
-    """``quantized=True``: INT8 cache with per-(layer, kv-head) symmetric
-    scales (calibrated off-line in deployment; init'd to a generic RMS).
+               layers: Optional[int] = None,
+               paged: bool = False, page_size: int = 16,
+               num_pages: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Allocate a KV cache.  Three layouts:
+
+    * **dense** (default): ``{"k", "v"}`` of shape
+      ``[L, batch, max_len, n_kv, hd]`` — every slot pre-allocates
+      ``max_len`` positions.
+    * **dense + ``quantized=True``**: same shape at INT8 with
+      per-(layer, kv-head) symmetric ``k_scale``/``v_scale`` ``[L, n_kv]``
+      (calibrated off-line in deployment; init'd to a generic RMS).
+    * **``paged=True``**: ``{"k_pages", "v_pages"}`` of shape
+      ``[L, num_pages, page_size, n_kv, hd]`` — a shared pool of pages
+      addressed through a per-slot block table (see
+      ``serve.engine.PageAllocator``); HBM is claimed page-by-page on
+      demand instead of ``max_len`` up front.  With ``quantized=True``
+      the pages are INT8 and the scales are *per-slot*
+      ``[L, batch, n_kv]``, calibrated from each prompt at prefill
+      (``attention(calibrate_kv=True)``).  Page 0 is reserved as the
+      dump page idle slots harmlessly write into.
 
     ``layers`` overrides the leading layer axis — cut-aware serving gives
     the edge prefix and the cloud suffix each their own cache covering
     only their block sub-range."""
     n_layers = cfg.n_layers if layers is None else layers
+    if paged:
+        n_pages = num_pages if num_pages is not None else (
+            batch * ((max_len + page_size - 1) // page_size) + 1)
+        pdtype = jnp.int8 if quantized else (dtype or cfg.dtype)
+        shape = (n_layers, n_pages, page_size, cfg.n_kv, cfg.hd)
+        c = {"k_pages": jnp.zeros(shape, pdtype),
+             "v_pages": jnp.zeros(shape, pdtype)}
+        if quantized:
+            c["k_scale"] = jnp.full((n_layers, batch, cfg.n_kv), 0.05,
+                                    jnp.float32)
+            c["v_scale"] = jnp.full((n_layers, batch, cfg.n_kv), 0.05,
+                                    jnp.float32)
+        return c
     if quantized:
         shape = (n_layers, batch, max_len, cfg.n_kv, cfg.hd)
         return {"k": jnp.zeros(shape, jnp.int8),
@@ -239,6 +273,9 @@ def run_blocks(blocks: Params, x: jax.Array, cfg: LMConfig, *,
                cache: Optional[Dict[str, jax.Array]] = None,
                cache_index: Optional[jax.Array] = None,
                qctx: Optional[QuantCtx] = None,
+               block_tables: Optional[jax.Array] = None,
+               calibrate_kv: bool = False,
+               kv_lengths: Optional[jax.Array] = None,
                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Scan a *sub-range* of stacked decoder blocks over hidden states.
 
@@ -246,7 +283,10 @@ def run_blocks(blocks: Params, x: jax.Array, cfg: LMConfig, *,
     and the collaborative engines: the edge prefix and the cloud suffix
     each call it on their own block slice + KV cache.  ``cache_index``
     may be a scalar (uniform position) or a [B] vector of per-slot
-    positions.  INT8 caches (``k_scale`` entries) are handled uniformly.
+    positions.  INT8 caches (``k_scale`` entries) are handled uniformly;
+    paged caches (``k_pages`` entries, see ``init_cache``) additionally
+    need ``block_tables`` and pass ``calibrate_kv=True`` at prefill so
+    per-slot INT8 scales are derived from the prompt.
     """
     if cache is None:
         def body_nc(x, bp):
@@ -260,11 +300,14 @@ def run_blocks(blocks: Params, x: jax.Array, cfg: LMConfig, *,
         bp, c = scan_in
         c = dict(c)
         scales = None
-        if "k_scale" in c:
+        if "k_scale" in c and "k_pages" not in c:
             scales = (c.pop("k_scale"), c.pop("v_scale"))
         x, new_c, _ = block_apply(bp, x, cfg, rope=rope, cache=c,
                                   cache_index=cache_index, qctx=qctx,
-                                  kv_scales=scales)
+                                  kv_scales=scales,
+                                  block_tables=block_tables,
+                                  calibrate_kv=calibrate_kv,
+                                  kv_lengths=kv_lengths)
         if scales is not None:
             new_c = dict(new_c, k_scale=scales[0], v_scale=scales[1])
         return x, new_c
@@ -280,37 +323,62 @@ def lm_head(params: Params, x: jax.Array) -> jax.Array:
     return L.dense(params["lm_head"], x, name="lm_head")
 
 
+def _cache_span(cache: Dict[str, jax.Array],
+                block_tables: Optional[jax.Array]) -> int:
+    """Longest position the cache layout can address (for RoPE tables)."""
+    if "k" in cache:
+        return cache["k"].shape[2]
+    return block_tables.shape[1] * cache["k_pages"].shape[2]
+
+
 def prefill(params: Params, tokens: jax.Array, cfg: LMConfig, *,
             cache: Dict[str, jax.Array],
             qctx: Optional[QuantCtx] = None,
+            block_tables: Optional[jax.Array] = None,
+            last_pos: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Process the full prompt; returns (last-token logits, filled cache)."""
+    """Process the full prompt; returns (last-token logits, filled cache).
+
+    ``last_pos`` [B]: per-row index of the last *real* token — used by
+    the bucketed scheduler, whose prompts arrive right-padded to a
+    power-of-two; without it the logits come from position S-1.
+    Paged caches (``k_pages``) need ``block_tables`` and calibrate their
+    per-slot INT8 scales from this prompt."""
     b, s = tokens.shape
-    max_len = cache["k"].shape[2]
+    span = _cache_span(cache, block_tables)
     x = L.embed(params["embed"], tokens).astype(cfg.dtype)
-    rope = L.rope_table(max_len, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
+    rope = L.rope_table(span, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
     x, new_cache = run_blocks(params["blocks"], x, cfg, rope=rope,
                               cache=cache, cache_index=jnp.int32(0),
-                              qctx=qctx)
-    logits = lm_head(params, x[:, -1:])
+                              qctx=qctx, block_tables=block_tables,
+                              calibrate_kv="k_pages" in cache,
+                              kv_lengths=(None if last_pos is None
+                                          else last_pos + 1))
+    if last_pos is not None:
+        x = x[jnp.arange(b), last_pos][:, None]
+    else:
+        x = x[:, -1:]
+    logits = lm_head(params, x)
     return logits[:, 0], new_cache
 
 
 def decode_step(params: Params, token: jax.Array, cache: Dict[str, jax.Array],
                 cache_index: jax.Array, cfg: LMConfig, *,
                 qctx: Optional[QuantCtx] = None,
+                block_tables: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One autoregressive step: token [B] int32 → logits [B, V].
     ``cache_index`` is a scalar (uniform position) or a [B] vector of
-    per-slot positions (continuous batching).  Handles both bf16 and
-    INT8-quantized caches (scale entries ride along in the cache dict
-    and are sliced per layer by the scan)."""
-    max_len = cache["k"].shape[2]
+    per-slot positions (continuous batching).  Handles bf16,
+    INT8-quantized, and paged caches (scale entries ride along in the
+    cache dict and are sliced per layer by the scan; paged caches route
+    the read through the paged flash-decode kernel)."""
+    span = _cache_span(cache, block_tables)
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
-    rope = L.rope_table(max_len, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
+    rope = L.rope_table(span, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)
     x, new_cache = run_blocks(params["blocks"], x, cfg, rope=rope,
                               cache=cache, cache_index=cache_index,
-                              qctx=qctx)
+                              qctx=qctx, block_tables=block_tables)
     logits = lm_head(params, x)
     return logits[:, 0], new_cache
 

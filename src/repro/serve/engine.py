@@ -2,28 +2,46 @@
 the deployment side of the paper.
 
 Both engines share one slot-based continuous-batching scheduler
-(``_SlotEngine``): requests queue up, same-length prompts are prefilled
-together into free cache slots, every decode step advances all occupied
+(``_SlotEngine``): requests queue up, prompts are right-padded to
+power-of-two *buckets* and same-bucket prompts are prefilled together
+into free cache slots (bounding the number of distinct compiled prefill
+shapes — see ``trace_counts``), every decode step advances all occupied
 slots at their own positions (vector ``cache_index``), and a finished
-request frees its slot for the next queued prompt mid-flight.  Sampled
-tokens stay on device for the whole generation; the host sees them once,
-after the last step.
+request frees its slot — and its KV pages — for the next queued prompt
+mid-flight.  Sampled tokens stay on device for the whole generation; the
+host sees them once, after the last step.
+
+KV cache layouts (see ``transformer.init_cache`` for shapes):
+
+* **dense** — every slot owns ``max_len`` positions up front; the
+  decode einsum streams the whole ``[B, max_len]`` cache each step.
+* **paged** — slots own a block-table row into a shared page pool
+  (``PageAllocator``); HBM is claimed page-by-page at admission and
+  returned at retirement, and the decode read runs the paged
+  flash-decode kernel (``kernels.paged_attention``) whose cost scales
+  with *allocated* pages, not ``max_len``.
+* **paged + INT8** — pages store 1 B/elem with per-slot symmetric
+  scales calibrated from each prompt at prefill (paper Eq.1 applied to
+  serving state); dequantization happens inside the kernel's QK/AV
+  loops so the cache never materializes above 1 B/elem.
 
 ``ServingEngine`` is the cloud-only baseline: one KV cache over the full
-stack.
+stack (dense fp by default; ``paged=True``/``int8_kv=True`` opt in).
 
 ``CollaborativeServingEngine`` is the paper's mode rebuilt around
 *incremental decode*: the INT8 edge prefix (first ``cut_layer+1``
 blocks, fake-quant lattice == the Pallas int8 kernel's math) and the
 FP32 cloud suffix each own a KV cache covering only their block
-sub-range.  After a one-time split prefill, each decode step runs just
-the new token through the edge blocks, quantizes a single ``[B, 1, D]``
-boundary delta per Eq.(1), "transmits" those few bytes through the
-simulated wireless channel, dequantizes per Eq.(2), and finishes on the
-cloud side — so per-token wire traffic is O(1) in sequence length
-instead of re-shipping the whole boundary blob.  All four phase
-functions (edge/cloud x prefill/decode) are jit'd once; decode shapes
-are fixed, so there is no per-step recompilation.  The auto-tuner
+sub-range.  The edge cache defaults to the **paged INT8** layout — the
+paper's storage/bandwidth axis applied to decode state on the
+memory-constrained device.  After a one-time split prefill, each decode
+step runs just the new token through the edge blocks, quantizes a single
+``[B, 1, D]`` boundary delta per Eq.(1), "transmits" those few bytes
+through the simulated wireless channel, dequantizes per Eq.(2), and
+finishes on the cloud side — so per-token wire traffic is O(1) in
+sequence length instead of re-shipping the whole boundary blob.  All
+phase functions (edge/cloud x prefill/decode) are jit'd once; decode
+shapes are fixed, so there is no per-step recompilation.  The auto-tuner
 (Algorithm 1) chooses the cut.
 """
 from __future__ import annotations
@@ -31,7 +49,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +64,179 @@ Params = Any
 
 # wire framing overhead for one quantized blob: f32 scale + f32 zero-point
 _QP_BYTES = 8
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _bucket_len(plen: int, max_len: int) -> int:
+    """Power-of-two prefill bucket (floor 8, capped at ``max_len``)."""
+    b = 8
+    while b < plen:
+        b *= 2
+    return min(b, max_len)
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV bookkeeping (host side)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """LIFO free-list allocator over a fixed pool of KV-cache pages.
+
+    Page 0 is never handed out: retired/idle slots keep a zeroed block
+    table row, so their (masked, harmless) decode writes land in page 0
+    instead of corrupting a page that has been re-allocated to a live
+    request.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least one allocatable page"
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._live: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def live(self) -> frozenset:
+        return frozenset(self._live)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: need {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._live:
+                raise ValueError(f"double free of page {p}")
+            self._live.remove(p)
+            self._free.append(p)
+
+
+class _PagedPool:
+    """Block table + allocator for one engine-side page pool.
+
+    Pages for a request are claimed once at admission — enough to cover
+    its padded prompt plus its (known) generation budget — and returned
+    the moment the scheduler retires the slot.
+    """
+
+    def __init__(self, max_batch: int, pages_per_slot: int, num_pages: int,
+                 page_size: int):
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.allocator = PageAllocator(num_pages)
+        self.bt = np.zeros((max_batch, pages_per_slot), np.int32)
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._dev: Optional[jax.Array] = None
+
+    @classmethod
+    def build(cls, max_batch: int, max_len: int, page_size: int,
+              num_pages: Optional[int] = None) -> "_PagedPool":
+        """Standard sizing: worst case ``max_batch`` full-length slots
+        plus the reserved dump page, unless ``num_pages`` undersizes the
+        pool on purpose (admission then backpressures, see
+        ``_SlotEngine._can_admit``)."""
+        pages_per_slot = _cdiv(max_len, page_size)
+        if num_pages is None:
+            num_pages = max_batch * pages_per_slot + 1
+        return cls(max_batch, pages_per_slot, num_pages, page_size)
+
+    def pages_needed(self, plen: int, max_new: int, padded_len: int) -> int:
+        return _cdiv(max(int(plen) + int(max_new), int(padded_len)),
+                     self.page_size)
+
+    def can_admit(self, shapes: Sequence[Tuple[int, int]],
+                  padded_len: int) -> bool:
+        """Would a prefill group of (plen, max_new) shapes fit the free
+        list right now?"""
+        return sum(self.pages_needed(p, m, padded_len)
+                   for p, m in shapes) <= self.allocator.num_free
+
+    def live_cache_bytes(self, cache: Dict[str, jax.Array]) -> int:
+        """Bytes resident in currently-allocated pages (+ scales) of the
+        paged ``cache`` this pool indexes — the demand-paging footprint,
+        as opposed to the pool's capacity."""
+        per_page = int(np.prod(cache["k_pages"].shape[2:])) \
+            * cache["k_pages"].dtype.itemsize
+        n_layers = cache["k_pages"].shape[0]
+        scales = sum(v.size * v.dtype.itemsize
+                     for k, v in cache.items() if "scale" in k)
+        return 2 * n_layers * len(self.allocator.live) * per_page + scales
+
+    def admit(self, slots: Sequence[int], plens: Sequence[int],
+              max_news: Sequence[int], padded_len: int) -> jax.Array:
+        """Allocate pages for a prefill group; returns the group's block
+        table rows [n, pages_per_slot]."""
+        for s, pl_, mn in zip(slots, plens, max_news):
+            pages = self.allocator.alloc(
+                self.pages_needed(pl_, mn, padded_len))
+            self._slot_pages[int(s)] = pages
+            self.bt[s, :] = 0
+            self.bt[s, :len(pages)] = pages
+        self._dev = None
+        # explicit copy: jax on CPU may zero-copy-alias numpy buffers, and
+        # ``bt`` is mutated on the host while async decode steps are still
+        # in flight — sharing it would race
+        return jnp.array(self.bt[np.asarray(slots)], copy=True)
+
+    def retire(self, slot: int) -> None:
+        pages = self._slot_pages.pop(int(slot), None)
+        if pages is not None:
+            self.allocator.free(pages)
+            self.bt[slot, :] = 0
+            self._dev = None
+
+    def table_dev(self) -> jax.Array:
+        """Block table on device, trimmed to the pages actually in use
+        (rounded up to a power of two, so decode retraces are bounded by
+        log2(pages_per_slot) widths, not every occupancy) — the decode
+        read then costs O(allocated pages), not O(max_len).  Cached
+        until the next admit/retire.  Copied, never aliased: the host
+        mutates ``bt`` while earlier async decode steps may still be
+        reading the device buffer."""
+        if self._dev is None:
+            used = max((len(p) for p in self._slot_pages.values()),
+                       default=1)
+            width = 1
+            while width < used:
+                width *= 2
+            width = min(width, self.pages_per_slot)
+            self._dev = jnp.array(self.bt[:, :width], copy=True)
+        return self._dev
+
+
+def _paged_prefill_view(cache: Dict[str, jax.Array], n_layers: int, n: int,
+                        n_kv: int) -> Dict[str, jax.Array]:
+    """Group-local view of a paged cache for one prefill call: the
+    shared page pool plus fresh scale rows for the ``n``-row group (the
+    prefill calibrates them; scatter back with _paged_prefill_merge)."""
+    group = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+    if "k_scale" in cache:
+        group["k_scale"] = jnp.zeros((n_layers, n, n_kv), jnp.float32)
+        group["v_scale"] = jnp.zeros_like(group["k_scale"])
+    return group
+
+
+def _paged_prefill_merge(cache: Dict[str, jax.Array],
+                         group: Dict[str, jax.Array],
+                         slots: jax.Array) -> Dict[str, jax.Array]:
+    cache = dict(cache, k_pages=group["k_pages"], v_pages=group["v_pages"])
+    if "k_scale" in cache:
+        cache["k_scale"] = cache["k_scale"].at[:, slots].set(
+            group["k_scale"])
+        cache["v_scale"] = cache["v_scale"].at[:, slots].set(
+            group["v_scale"])
+    return cache
 
 
 @dataclasses.dataclass
@@ -67,10 +258,12 @@ class ServeStats:
     uplinks: each entry is ``n_active * (D·itemsize + 8)``, i.e. one
     per-row-quantized [1, D] delta per *live* request — it shrinks as
     slots free and never grows with sequence length, which is the O(1)
-    per-token property.  ``prefill_s``/``decode_s`` are wall-clock phase
-    totals, populated when the engine runs with ``timed=True`` (timing
-    blocks on device results, so it is off by default to keep the
-    decode loop fully async)."""
+    per-token property.  Prefill uplinks are charged by each request's
+    *true* prompt length — bucket padding is a compile-shape artifact
+    and never crosses the wire.  ``prefill_s``/``decode_s`` are
+    wall-clock phase totals, populated when the engine runs with
+    ``timed=True`` (timing blocks on device results, so it is off by
+    default to keep the decode loop fully async)."""
     prefill_calls: int = 0
     decode_steps: int = 0
     transmitted_bytes: int = 0
@@ -106,11 +299,18 @@ class ServeStats:
 class _SlotEngine:
     """Slot-based continuous-batching scheduler shared by both engines.
 
-    Subclasses implement ``_admit`` (prefill a same-length prompt group
-    into specific slots) and ``_decode_all`` (advance every slot one
-    token).  The scheduler keeps the current token and position of every
-    slot on device; request outputs are transferred to the host once,
-    after the final step.
+    Subclasses implement ``_admit`` (prefill a prompt group into specific
+    slots), ``_decode_all`` (advance every slot one token), and may hook
+    ``_retire`` (a slot's request finished — e.g. return its KV pages).
+    The scheduler keeps the current token and position of every slot on
+    device; request outputs are transferred to the host once, after the
+    final step.
+
+    Admission pads each prompt group to a power-of-two bucket
+    (``_bucket_len``), so the number of distinct prefill trace shapes is
+    bounded by O(log2(max_len) · max_batch) instead of growing with
+    every unique prompt length.  ``trace_counts`` counts actual
+    retraces of the jit'd phase functions; tests pin it.
     """
 
     def __init__(self, cfg: TF.LMConfig, *, max_batch: int, max_len: int,
@@ -120,17 +320,35 @@ class _SlotEngine:
         self.max_len = max_len
         self.timed = timed
         self.stats = ServeStats()
+        self.trace_counts = {"prefill": 0, "decode": 0}
 
     # -- subclass interface -------------------------------------------------
-    def _admit(self, toks: jax.Array, slots: jax.Array, cur: jax.Array,
-               pos: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    def _admit(self, toks: jax.Array, plens: np.ndarray, max_news: np.ndarray,
+               slots: np.ndarray, cur: jax.Array, pos: jax.Array,
+               ) -> Tuple[jax.Array, jax.Array]:
         raise NotImplementedError
 
     def _decode_all(self, cur: jax.Array, pos: jax.Array,
                     n_active: int) -> Tuple[jax.Array, jax.Array]:
         raise NotImplementedError
 
-    # -- timing helper ------------------------------------------------------
+    def _retire(self, slot: int) -> None:
+        """Hook: the request in ``slot`` finished (free paged KV, etc.)."""
+
+    def _can_admit(self, group_shapes: List[Tuple[int, int]], plen: int,
+                   max_new: int, bucket: int) -> bool:
+        """Hook: may this request join the prefill group right now?
+        ``group_shapes`` are the (plen, max_new) pairs already accepted
+        into the group this round.  Paged engines refuse when the page
+        pool can't cover the whole group, backpressuring admission until
+        retirements return pages."""
+        return True
+
+    # -- shared helpers -----------------------------------------------------
+    def _rope(self):
+        return ML.rope_table(self.max_len, self.cfg.hd,
+                             base=self.cfg.rope_base, dtype=self.cfg.dtype)
+
     def _timed(self, phase: str, fn):
         if not self.timed:
             return fn()
@@ -161,35 +379,62 @@ class _SlotEngine:
         placements: List[Tuple[Request, int, int]] = []
         step = 0
         while queue or active:
-            # admit queued prompts into free slots, grouping equal lengths
-            # so one batched prefill call covers the whole group
-            while free and queue:
-                plen = len(queue[0].prompt)
-                assert plen + queue[0].max_new_tokens <= self.max_len, \
-                    "prompt + generation exceeds cache max_len"
+            # admit queued prompts into free slots, grouping by prefill
+            # bucket so one batched, fixed-shape prefill call covers the
+            # whole group; a paged engine may refuse (pool backpressure),
+            # in which case the request waits for a retirement
+            stalled = False
+            while free and queue and not stalled:
+                bucket = _bucket_len(len(queue[0].prompt), self.max_len)
                 group, slots = [], []
-                while free and queue and len(queue[0].prompt) == plen:
+                shapes: List[Tuple[int, int]] = []
+                while free and queue and _bucket_len(
+                        len(queue[0].prompt), self.max_len) == bucket:
+                    r = queue[0]
+                    assert len(r.prompt) + r.max_new_tokens <= self.max_len, \
+                        "prompt + generation exceeds cache max_len"
+                    if not self._can_admit(shapes, len(r.prompt),
+                                           r.max_new_tokens, bucket):
+                        stalled = True
+                        break
+                    shapes.append((len(r.prompt), r.max_new_tokens))
                     group.append(queue.popleft())
                     slots.append(free.pop(0))
-                toks = jnp.asarray(
-                    np.stack([r.prompt for r in group]).astype(np.int32))
-                slots_a = jnp.asarray(np.asarray(slots, np.int32))
+                if not group:
+                    break
+                toks = np.zeros((len(group), bucket), np.int32)
+                for i, r in enumerate(group):
+                    toks[i, :len(r.prompt)] = r.prompt
+                plens = np.asarray([len(r.prompt) for r in group], np.int32)
+                max_news = np.asarray([r.max_new_tokens for r in group],
+                                      np.int32)
+                slots_a = np.asarray(slots, np.int32)
+                toks_j = jnp.asarray(toks)
                 cur, pos = self._timed(
-                    "prefill_s", lambda: self._admit(toks, slots_a, cur, pos))
+                    "prefill_s",
+                    lambda: self._admit(toks_j, plens, max_news, slots_a,
+                                        cur, pos))
                 self.stats.prefill_calls += 1
-                self.stats.prefill_tokens += plen * len(group)
+                self.stats.prefill_tokens += int(plens.sum())
                 for r, s in zip(group, slots):
                     active[s] = (r, step)
                     placements.append((r, s, step))
+            if stalled and not active:
+                r = queue[0]
+                raise RuntimeError(
+                    f"KV page pool too small for request uid={r.uid} "
+                    f"(prompt {len(r.prompt)} + {r.max_new_tokens} new "
+                    f"tokens) even with every slot idle")
             step_toks.append(cur)
             step += 1
             # retire requests whose final token was just recorded — before
             # decoding, so no request pays for a step it never reads and
-            # its slot frees one step earlier for the queue
+            # its slot (and KV pages) free one step earlier for the queue
             for s in [s for s, (r, t0) in active.items()
                       if step - t0 >= r.max_new_tokens]:
                 r, _ = active.pop(s)
                 r.done = True
+                self._retire(s)
                 free.append(s)
             if active:
                 cur, pos = self._timed(
@@ -205,52 +450,126 @@ class _SlotEngine:
 
 
 class ServingEngine(_SlotEngine):
-    """Cloud-only batched engine (greedy decode, continuous batching)."""
+    """Cloud-only batched engine (greedy decode, continuous batching).
+
+    ``paged=True`` swaps the dense per-slot cache for the block-table
+    page pool (+ ``int8_kv=True`` for 1 B/elem pages with per-slot
+    scales); ``cache_dtype`` overrides the dense cache's storage dtype
+    (e.g. bf16 for the fp16-cache baseline in the benchmarks)."""
 
     def __init__(self, params: Params, cfg: TF.LMConfig, *,
                  max_batch: int = 4, max_len: int = 128,
-                 timed: bool = False):
+                 paged: bool = False, page_size: int = 16,
+                 int8_kv: bool = False, num_pages: Optional[int] = None,
+                 cache_dtype=None, timed: bool = False):
         super().__init__(cfg, max_batch=max_batch, max_len=max_len,
                          timed=timed)
         self.params = params
-        self._cache = TF.init_cache(self.cfg, max_batch, max_len=max_len)
-        self._prefill = jax.jit(self._prefill_impl)
+        self.paged = paged
+        self.page_size = page_size
+        self.int8_kv = int8_kv
+        if paged:
+            self._pool = _PagedPool.build(max_batch, max_len, page_size,
+                                          num_pages)
+            self._cache = TF.init_cache(
+                self.cfg, max_batch, max_len, paged=True,
+                page_size=page_size, quantized=int8_kv,
+                num_pages=self._pool.allocator.num_pages, dtype=cache_dtype)
+            self._prefill = jax.jit(self._paged_prefill_impl)
+        else:
+            self._cache = TF.init_cache(self.cfg, max_batch, max_len=max_len,
+                                        dtype=cache_dtype,
+                                        quantized=int8_kv)
+            self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
 
-    def _prefill_impl(self, params, toks, cache, slots, cur, pos):
-        n, plen = toks.shape
-        small = TF.init_cache(self.cfg, n, max_len=self.max_len)
-        logits, small = TF.prefill(params, toks, self.cfg, cache=small)
-        cache = {k: cache[k].at[:, slots].set(small[k]) for k in cache}
+    def _prefill_impl(self, params, toks, cache, slots, cur, pos, plens):
+        self.trace_counts["prefill"] += 1
+        n, _ = toks.shape
+        small = TF.init_cache(self.cfg, n, max_len=self.max_len,
+                              quantized=self.int8_kv,
+                              dtype=cache["k"].dtype)
+        logits, small = TF.prefill(params, toks, self.cfg, cache=small,
+                                   last_pos=plens - 1)
+        cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
+                               for k in ("k", "v")})
         cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
-        pos = pos.at[slots].set(plen)
+        pos = pos.at[slots].set(plens)
         return cache, cur, pos
 
-    def _decode_impl(self, params, cur, cache, pos):
-        logits, cache = TF.decode_step(params, cur, cache, pos, self.cfg)
+    def _paged_prefill_impl(self, params, toks, cache, bt_rows, slots, cur,
+                            pos, plens):
+        self.trace_counts["prefill"] += 1
+        group = _paged_prefill_view(cache, self.cfg.n_layers, toks.shape[0],
+                                    self.cfg.n_kv)
+        logits, group = TF.prefill(params, toks, self.cfg, cache=group,
+                                   block_tables=bt_rows, last_pos=plens - 1)
+        cache = _paged_prefill_merge(cache, group, slots)
+        cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
+        pos = pos.at[slots].set(plens)
+        return cache, cur, pos
+
+    def _decode_impl(self, params, cur, cache, pos, bt):
+        self.trace_counts["decode"] += 1
+        logits, cache = TF.decode_step(params, cur, cache, pos, self.cfg,
+                                       block_tables=bt)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
 
-    def _admit(self, toks, slots, cur, pos):
-        self._cache, cur, pos = self._prefill(
-            self.params, toks, self._cache, slots, cur, pos)
+    def _admit(self, toks, plens, max_news, slots, cur, pos):
+        if self.paged:
+            bt_rows = self._pool.admit(slots, plens, max_news, toks.shape[1])
+            self._cache, cur, pos = self._prefill(
+                self.params, toks, self._cache, bt_rows, jnp.asarray(slots),
+                cur, pos, jnp.asarray(plens))
+        else:
+            self._cache, cur, pos = self._prefill(
+                self.params, toks, self._cache, jnp.asarray(slots), cur, pos,
+                jnp.asarray(plens))
         return cur, pos
 
     def _decode_all(self, cur, pos, n_active):
+        bt = self._pool.table_dev() if self.paged else None
         cur, self._cache, pos = self._decode(self.params, cur,
-                                             self._cache, pos)
+                                             self._cache, pos, bt)
         return cur, pos
+
+    def _retire(self, slot):
+        if self.paged:
+            self._pool.retire(slot)
+
+    def _can_admit(self, group_shapes, plen, max_new, bucket):
+        if not self.paged:
+            return True
+        return self._pool.can_admit(group_shapes + [(plen, max_new)], bucket)
+
+    def cache_bytes(self, *, live_only: bool = False) -> int:
+        """Cache footprint in bytes.  ``live_only`` counts just the
+        pages currently allocated to requests (the demand-paging win)."""
+        if self.paged and live_only:
+            return self._pool.live_cache_bytes(self._cache)
+        return sum(v.size * v.dtype.itemsize for v in self._cache.values())
 
 
 class CollaborativeServingEngine(_SlotEngine):
     """Paper mode with incremental decode: INT8 edge prefix and FP32
     cloud suffix hold *split* KV caches over their own block sub-ranges;
     each decode step ships one quantized ``[B, 1, D]`` boundary delta
-    (Eq.1/2) through the channel instead of the whole growing blob."""
+    (Eq.1/2) through the channel instead of the whole growing blob.
+
+    The edge cache defaults to the paged INT8 layout: pages allocated on
+    demand through ``PageAllocator``, per-slot symmetric scales
+    calibrated from each prompt at edge prefill, and decode reads
+    through the paged flash-decode kernel.  ``edge_paged=False`` /
+    ``edge_int8=False`` fall back to the dense / fp layouts (the
+    PR-1-era configuration, kept as the equivalence oracle in tests)."""
 
     def __init__(self, params: Params, cfg: TF.LMConfig, *, cut_layer: int,
                  channel: Optional[Channel] = None, max_len: int = 128,
-                 a_bits: int = 8, max_batch: int = 4, timed: bool = False):
+                 a_bits: int = 8, max_batch: int = 4,
+                 edge_paged: bool = True, edge_int8: bool = True,
+                 page_size: int = 16, edge_num_pages: Optional[int] = None,
+                 timed: bool = False):
         assert 0 <= cut_layer < cfg.n_layers, \
             f"cut_layer {cut_layer} outside [0, {cfg.n_layers})"
         super().__init__(cfg, max_batch=max_batch, max_len=max_len,
@@ -260,6 +579,9 @@ class CollaborativeServingEngine(_SlotEngine):
         self.a_bits = a_bits
         self.n_edge = cut_layer + 1
         self.n_cloud = cfg.n_layers - self.n_edge
+        self.edge_paged = edge_paged
+        self.edge_int8 = edge_int8
+        self.page_size = page_size
 
         self.edge_blocks, self.cloud_blocks = TF.split_blocks(
             params, self.cfg, cut_layer)
@@ -269,8 +591,18 @@ class CollaborativeServingEngine(_SlotEngine):
         # edge weights are INT8-quantized at deployment (fake-quant lattice)
         self._edge_qctx = ML.QuantCtx(mode="dynamic", a_bits=a_bits)
         # split KV caches: edge prefix / cloud suffix block sub-ranges
-        self._edge_cache = TF.init_cache(self.cfg, max_batch, max_len,
-                                         layers=self.n_edge)
+        self._edge_pool: Optional[_PagedPool] = None
+        if edge_paged:
+            self._edge_pool = _PagedPool.build(max_batch, max_len,
+                                               page_size, edge_num_pages)
+            self._edge_cache = TF.init_cache(
+                self.cfg, max_batch, max_len, layers=self.n_edge,
+                paged=True, quantized=edge_int8, page_size=page_size,
+                num_pages=self._edge_pool.allocator.num_pages)
+        else:
+            self._edge_cache = TF.init_cache(self.cfg, max_batch, max_len,
+                                             layers=self.n_edge,
+                                             quantized=edge_int8)
         self._cloud_cache = TF.init_cache(self.cfg, max_batch, max_len,
                                           layers=self.n_cloud)
         self._edge = jax.jit(self._edge_impl)
@@ -282,16 +614,25 @@ class CollaborativeServingEngine(_SlotEngine):
 
     # -- wire accounting ----------------------------------------------------
     def _account(self, blob: jax.Array, *, phase: str,
-                 rows: Optional[int] = None) -> None:
-        """Charge the wire for ``rows`` occupied batch rows of ``blob``.
+                 rows: Optional[int] = None,
+                 row_elems: Optional[np.ndarray] = None) -> None:
+        """Charge the wire for the occupied batch rows of ``blob``.
 
         The jit'd decode step always computes the full fixed-shape
         [max_batch, 1, D] delta, but idle slots would never be sent, so
         the simulated wire carries only the active rows — each framed
-        with its own Eq.(1) scale/zero-point (per-row quantization)."""
-        n_rows = blob.shape[0] if rows is None else rows
-        per_row = (blob.size // blob.shape[0]) * blob.dtype.itemsize
-        nbytes = n_rows * (per_row + _QP_BYTES)
+        with its own Eq.(1) scale/zero-point (per-row quantization).
+        ``row_elems`` overrides the per-row payload element count: the
+        prefill blob is bucket-padded on device, but only each request's
+        true prompt activations cross the wire."""
+        itemsize = blob.dtype.itemsize
+        if row_elems is not None:
+            nbytes = int(sum(int(e) * itemsize + _QP_BYTES
+                             for e in row_elems))
+        else:
+            n_rows = blob.shape[0] if rows is None else rows
+            per_row = (blob.size // blob.shape[0]) * itemsize
+            nbytes = n_rows * (per_row + _QP_BYTES)
         self.stats.transmitted_bytes += int(nbytes)
         self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
         if phase == "prefill":
@@ -311,44 +652,60 @@ class CollaborativeServingEngine(_SlotEngine):
         self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
 
     # -- incremental split-cache phases --------------------------------------
-    def _rope(self):
-        return ML.rope_table(self.max_len, self.cfg.hd,
-                             base=self.cfg.rope_base, dtype=self.cfg.dtype)
-
-    def _edge_prefill_impl(self, blocks, embed, toks, cache, slots):
+    def _edge_prefill_impl(self, blocks, embed, toks, cache, slots, bt_rows,
+                           plens):
+        self.trace_counts["prefill"] += 1
         cfg = self.cfg
-        n = toks.shape[0]
-        small = TF.init_cache(cfg, n, self.max_len, layers=self.n_edge)
+        n, s = toks.shape
         x = ML.embed(embed, toks).astype(cfg.dtype)
-        h, small = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
-                                 cache=small, cache_index=jnp.int32(0),
-                                 qctx=self._edge_qctx)
-        cache = {k: cache[k].at[:, slots].set(small[k]) for k in cache}
+        if self.edge_paged:
+            group = _paged_prefill_view(cache, self.n_edge, n, cfg.n_kv)
+            h, group = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
+                                     cache=group, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx,
+                                     block_tables=bt_rows,
+                                     calibrate_kv=self.edge_int8,
+                                     kv_lengths=plens)
+            cache = _paged_prefill_merge(cache, group, slots)
+        else:
+            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_edge,
+                                  quantized=self.edge_int8)
+            h, small = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
+                                     cache=small, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx)
+            cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
+                                   for k in ("k", "v")})
         # Eq.(1), per batch row: each request gets its own thresholds, so
         # one request's range never depends on its neighbours' activations
-        qp = compute_qparams(h, axis=0, bits=self.a_bits)
+        # — or on its own bucket padding (pad positions are clamped to a
+        # real activation before the min/max reduction; the padded tail
+        # never crosses the wire, see _account)
+        ranged = jnp.where(jnp.arange(s)[None, :, None] <
+                           plens[:, None, None], h, h[:, :1])
+        qp = compute_qparams(ranged, axis=0, bits=self.a_bits)
         return quantize(h, qp), qp, cache
 
     def _cloud_prefill_impl(self, blocks, tail, blob, qp, cache, slots,
-                            cur, pos):
+                            cur, pos, plens):
         cfg = self.cfg
         h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
-        n, plen, _ = h.shape
+        n = h.shape[0]
         small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud)
         x, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
                                  cache=small, cache_index=jnp.int32(0))
         cache = {k: cache[k].at[:, slots].set(small[k]) for k in cache}
-        logits = TF.lm_head(tail, x[:, -1:])[:, 0]
+        logits = TF.lm_head(tail, x[jnp.arange(n), plens - 1][:, None])[:, 0]
         cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
-        pos = pos.at[slots].set(plen)
+        pos = pos.at[slots].set(plens)
         return cache, cur, pos
 
-    def _edge_decode_impl(self, blocks, embed, cur, cache, pos):
+    def _edge_decode_impl(self, blocks, embed, cur, cache, pos, bt):
+        self.trace_counts["decode"] += 1
         cfg = self.cfg
         x = ML.embed(embed, cur[:, None]).astype(cfg.dtype)
         h, cache = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
                                  cache=cache, cache_index=pos,
-                                 qctx=self._edge_qctx)
+                                 qctx=self._edge_qctx, block_tables=bt)
         # Eq.(1) per row: stale activations in idle/freed slots must not
         # set the quant range of live requests' deltas
         qp = compute_qparams(h, axis=0, bits=self.a_bits)
@@ -364,24 +721,50 @@ class CollaborativeServingEngine(_SlotEngine):
         return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
 
     # -- scheduler hooks ----------------------------------------------------
-    def _admit(self, toks, slots, cur, pos):
+    def _admit(self, toks, plens, max_news, slots, cur, pos):
+        bt_rows = None
+        if self.edge_paged:
+            bt_rows = self._edge_pool.admit(slots, plens, max_news,
+                                            toks.shape[1])
+        slots_j = jnp.asarray(slots)
+        plens_j = jnp.asarray(plens)
         blob, qp, self._edge_cache = self._edge_prefill(
-            self.edge_blocks, self.embed, toks, self._edge_cache, slots)
-        self._account(blob, phase="prefill")
+            self.edge_blocks, self.embed, toks, self._edge_cache, slots_j,
+            bt_rows, plens_j)
+        self._account(blob, phase="prefill",
+                      row_elems=plens.astype(np.int64) * self.cfg.d_model)
         self._cloud_cache, cur, pos = self._cloud_prefill(
             self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
-            slots, cur, pos)
+            slots_j, cur, pos, plens_j)
         self._account_downlink(toks.shape[0])
         return cur, pos
 
     def _decode_all(self, cur, pos, n_active):
+        bt = self._edge_pool.table_dev() if self.edge_paged else None
         blob, qp, self._edge_cache = self._edge_decode(
-            self.edge_blocks, self.embed, cur, self._edge_cache, pos)
+            self.edge_blocks, self.embed, cur, self._edge_cache, pos, bt)
         self._account(blob, phase="decode", rows=n_active)
         cur, self._cloud_cache, pos = self._cloud_decode(
             self.cloud_blocks, self.tail, blob, qp, self._cloud_cache, pos)
         self._account_downlink(n_active)
         return cur, pos
+
+    def _retire(self, slot):
+        if self.edge_paged:
+            self._edge_pool.retire(slot)
+
+    def _can_admit(self, group_shapes, plen, max_new, bucket):
+        if not self.edge_paged:
+            return True
+        return self._edge_pool.can_admit(group_shapes + [(plen, max_new)],
+                                         bucket)
+
+    def edge_cache_bytes(self, *, live_only: bool = False) -> int:
+        """Edge KV footprint; ``live_only`` counts allocated pages only."""
+        if self.edge_paged and live_only:
+            return self._edge_pool.live_cache_bytes(self._edge_cache)
+        return sum(v.size * v.dtype.itemsize
+                   for v in self._edge_cache.values())
 
     # -- seed recompute path (kept as the benchmark baseline) ----------------
     def _edge_impl(self, blocks, embed, tokens):

@@ -65,12 +65,15 @@ def test_split_cache_logits_match_monolithic(params, cut):
 
 @pytest.mark.parametrize("cut", [0, 1, 2])
 def test_incremental_decode_matches_recompute(params, cut):
-    """With quantization noise out of the way (16-bit lattice), the
-    incremental split-cache decode must emit exactly the seed recompute
-    path's greedy tokens — the cache refactor is lossless."""
+    """With quantization noise out of the way (16-bit lattice, fp dense
+    edge cache — the INT8 paged default is covered with quant tolerance
+    in test_paged_attention), the incremental split-cache decode must
+    emit exactly the seed recompute path's greedy tokens — the cache
+    refactor is lossless."""
     prompts = _prompts(3)
     inc = CollaborativeServingEngine(params, CFG, cut_layer=cut,
-                                     max_batch=3, max_len=32, a_bits=16)
+                                     max_batch=3, max_len=32, a_bits=16,
+                                     edge_paged=False, edge_int8=False)
     got = inc.generate(prompts, max_new_tokens=8)
     rec = CollaborativeServingEngine(params, CFG, cut_layer=cut,
                                      max_batch=3, max_len=32, a_bits=16)
@@ -138,7 +141,8 @@ def test_collab_continuous_batching_frees_slots(params):
     than slots drain through with split caches intact."""
     prompts = _prompts(5, seed=6)
     eng = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=2,
-                                     max_len=32, a_bits=16)
+                                     max_len=32, a_bits=16,
+                                     edge_paged=False, edge_int8=False)
     outs = eng.generate(prompts, max_new_tokens=3)
     rec = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=5,
                                      max_len=32, a_bits=16)

@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; skip, don't "
+    "kill collection of the whole tier-1 suite")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.quant import QuantParams, compute_qparams, quantize
 from repro.kernels.ops import int8_matmul, quantized_dense

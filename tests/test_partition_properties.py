@@ -1,7 +1,12 @@
 """Hypothesis property tests on the partition system's invariants, over
 randomly generated DAGs (random branches and shortcuts)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; skip, don't "
+    "kill collection of the whole tier-1 suite")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.graph import LayerGraph
 from repro.core.partition import (candidate_partition_points,

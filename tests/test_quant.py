@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; skip, don't "
+    "kill collection of the whole tier-1 suite")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.quant import (
     EMACalibrator,
