@@ -94,7 +94,8 @@ def run(print_fn=print) -> dict:
     # greedy fidelity of the collaborative default (paged INT8 edge)
     fp = CollaborativeServingEngine(params, CFG, cut_layer=1, max_len=128,
                                     max_batch=BATCH, edge_paged=False,
-                                    edge_int8=False)
+                                    edge_int8=False, cloud_paged=False,
+                                    cloud_int8=False)
     q8 = CollaborativeServingEngine(params, CFG, cut_layer=1, max_len=128,
                                     max_batch=BATCH, page_size=PAGE)
     ref = fp.generate(prompts, max_new_tokens=NEW)

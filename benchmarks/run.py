@@ -3,20 +3,35 @@
 Prints human tables per benchmark, then a machine-readable
 ``name,us_per_call,derived`` CSV summary at the end.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+``--quick`` is the CI smoke mode: every section's callable is still
+resolved (so a renamed/broken benchmark registration fails loudly on
+CPU), but only the cheap analytic sections and a shrunken speculative-
+decode run actually execute.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 
-def main() -> None:
-    from benchmarks import (fig3_breakdown, kernel_bench, roofline,
-                            table3_partition, table12_transmission)
+def main(quick: bool = False) -> None:
+    from benchmarks import (collab_decode, fig3_breakdown, kernel_bench,
+                            optimized_decode, paged_decode, roofline,
+                            spec_decode, table3_partition,
+                            table12_transmission)
 
     csv_rows = []
 
-    def section(name, fn, derived_fn):
+    def section(name, fn, derived_fn, *, heavy: bool = False):
+        # resolve the callable eagerly even when skipping: registration
+        # breakage (renamed module/function) must fail in --quick too
+        assert callable(fn), name
+        if quick and heavy:
+            print(f"\n=== {name} (skipped: --quick) " + "=" * 40)
+            csv_rows.append((name, 0.0, "skipped"))
+            return None
         print(f"\n=== {name} " + "=" * max(1, 66 - len(name)))
         t0 = time.perf_counter()
         result = fn()
@@ -35,32 +50,36 @@ def main() -> None:
                       f"best={[x[0] for x in r if x[5]][0]}")
     section("kernel_int8_matmul", kernel_bench.run,
             lambda r: f"int8_vs_fp32={r['t_int8_us'] / r['t_f32_us']:.2f};"
-                      f"rel_err={r['rel_err']:.4f}")
+                      f"rel_err={r['rel_err']:.4f}", heavy=True)
     section("kernel_paged_attention", kernel_bench.run_paged,
             lambda r: f"speedup@4096={r['paged_speedup_at_4096']:.1f}x;"
-                      f"kernel_err={r['kernel_ref_err']:.1e}")
+                      f"kernel_err={r['kernel_ref_err']:.1e}", heavy=True)
     section("roofline_16x16", lambda: roofline.run(mesh="16x16"),
             lambda r: f"cells={len(r)}")
     section("roofline_multipod", lambda: roofline.run(mesh="multipod"),
             lambda r: f"cells={len(r)}")
 
-    from benchmarks import optimized_decode
     section("optimized_decode_serving", optimized_decode.summarize,
-            lambda r: f"cells={len(r)}")
+            lambda r: f"cells={len(r)}", heavy=True)
 
-    from benchmarks import collab_decode
     section("collab_decode", collab_decode.run,
             lambda r: f"us_per_token={r['incremental']['us_per_token']:.0f};"
                       f"bytes_per_token="
                       f"{r['incremental']['bytes_per_token']:.0f};"
-                      f"speedup={r['speedup_wall']:.1f}x")
+                      f"speedup={r['speedup_wall']:.1f}x", heavy=True)
 
-    from benchmarks import paged_decode
     section("paged_decode", paged_decode.run,
             lambda r: ";".join(
                 f"{row['max_len']}:{row['speedup']:.1f}x/"
                 f"{row['cache_bytes_ratio']:.0f}xB"
-                for row in r["sweep"]))
+                for row in r["sweep"]), heavy=True)
+
+    section("spec_decode", lambda: spec_decode.run(quick=quick),
+            lambda r: ";".join(
+                f"k={k}:{v['e2e_speedup_vs_k1']:.2f}x/"
+                f"{v['wire_reduction_vs_k1']:.2f}xB"
+                for k, v in r["speculative"].items())
+            + f";autotuned_k={r['autotuned_k']}")
 
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")
@@ -69,4 +88,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: resolve every registration, run only "
+                         "the cheap sections")
+    main(quick=ap.parse_args().quick)

@@ -1,4 +1,5 @@
-"""Auto-tuning partition — the paper's Algorithm 1.
+"""Auto-tuning partition — the paper's Algorithm 1 — and its serving-time
+sibling: auto-tuning the speculative draft length.
 
 For every candidate cut L_i (from §2.2's rules):
   Net_edge  = Net.Split(First, L_i)   quantized to INT8
@@ -9,19 +10,31 @@ is returned.  ``p_best`` minimizes end-to-end latency by default; the
 paper also reports the "fastest" vs "best" distinction (best = fastest
 subject to edge-storage/accuracy constraints) which we expose through
 ``constraints``.
+
+``tune_spec_k`` applies the same predict-then-pick loop to the decode
+round length k of the speculative collaborative engine: for every
+candidate k it evaluates ``costmodel.speculative_round_time`` (draft k
+tokens locally, one uplink, one batched verify, one downlink) at the
+environment's channel and the measured/assumed draft acceptance rate,
+and returns the k minimizing predicted time per *accepted* token.  k=1
+is always a candidate and recovers the non-speculative step exactly, so
+the tuner degrades gracefully on fast channels or poor drafts.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
-from repro.core.costmodel import (Channel, DeviceModel, Profile,
-                                  layer_time, subgraph_time)
+from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel, DeviceModel,
+                                  EDGE_TX2_CLASS, PhaseBreakdown, Profile,
+                                  expected_accepted_tokens, layer_time,
+                                  speculative_round_time, subgraph_time)
 from repro.core.graph import LayerGraph
 from repro.core.partition import (CandidatePoint, candidate_partition_points,
                                   merge_non_parametric)
 
-__all__ = ["PartitionPerf", "AutoTuner", "auto_tune"]
+__all__ = ["PartitionPerf", "AutoTuner", "auto_tune", "SpecKPerf",
+           "tune_spec_k", "spec_k_for_lm"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,3 +136,68 @@ def auto_tune(graph: LayerGraph, edge: DeviceModel, cloud: DeviceModel,
               channel: Channel, **kw) -> tuple[PartitionPerf, List[PartitionPerf]]:
     """One-shot convenience wrapper (Algorithm 1 end-to-end)."""
     return AutoTuner(graph, edge, cloud, **kw).tune(channel)
+
+
+# ---------------------------------------------------------------------------
+# Speculative draft-length auto-tuning (Algorithm 1's loop applied to k)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecKPerf:
+    """The ``(k, info)`` record of the spec-k tuning loop."""
+    k: int
+    breakdown: PhaseBreakdown                # one round, tokens = E[accepts]
+    uplink_bytes_per_token: float            # wire bytes per accepted token
+
+    @property
+    def s_per_token(self) -> float:
+        return self.breakdown.per_token_s
+
+
+def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
+                edge: DeviceModel, cloud: DeviceModel, channel: Channel,
+                draft_flops: float = 0.0, acceptance: float = 0.8,
+                ks: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                return_bytes: float = 4.0, rows: int = 1,
+                ) -> Tuple[SpecKPerf, List[SpecKPerf]]:
+    """Pick the draft length k minimizing predicted time per accepted
+    token for this channel/acceptance-rate — per-step flop/byte inputs
+    are exactly ``collab_decode_step_time``'s, and the k=1 candidate
+    evaluates to exactly that non-speculative step."""
+    perfs = []
+    for k in ks:
+        bd = speculative_round_time(
+            k=k, edge_flops=edge_flops, cloud_flops=cloud_flops,
+            blob_bytes=blob_bytes, edge=edge, cloud=cloud, channel=channel,
+            draft_flops=draft_flops, acceptance=acceptance,
+            return_bytes=return_bytes, rows=rows)
+        uplink = k * blob_bytes + (k - 1) * 4.0 * rows
+        perfs.append(SpecKPerf(
+            k=k, breakdown=bd,
+            uplink_bytes_per_token=uplink
+            / expected_accepted_tokens(k, acceptance)))
+    best = min(perfs, key=lambda p: p.s_per_token)
+    return best, perfs
+
+
+def spec_k_for_lm(cfg, cut_layer: int, *, batch: int, channel: Channel,
+                  acceptance: float = 0.8,
+                  edge: DeviceModel = EDGE_TX2_CLASS,
+                  cloud: DeviceModel = CLOUD_TITANXP_CLASS,
+                  ks: Sequence[int] = (1, 2, 4, 8, 16),
+                  ) -> Tuple[SpecKPerf, List[SpecKPerf]]:
+    """``tune_spec_k`` with the per-step flops/bytes derived from an
+    ``LMConfig`` split at ``cut_layer`` — what
+    ``CollaborativeServingEngine(spec_k="auto")`` calls.  The edge's
+    draft model is the INT8 suffix copy, so ``draft_flops`` equals the
+    cloud suffix's per-step flops (run at INT8 throughput)."""
+    blk = cfg.block_param_count()
+    head = cfg.vocab * cfg.d_model + cfg.d_model
+    suffix = 2 * (blk * (cfg.n_layers - cut_layer - 1) + head) * batch
+    return tune_spec_k(
+        edge_flops=2 * blk * (cut_layer + 1) * batch,
+        cloud_flops=suffix, draft_flops=suffix,
+        blob_bytes=batch * (cfg.d_model + 8),
+        edge=edge, cloud=cloud, channel=channel, acceptance=acceptance,
+        ks=ks, return_bytes=4.0 * batch, rows=batch)

@@ -21,7 +21,8 @@ from repro.core.graph import LayerGraph, Node
 __all__ = ["DeviceModel", "Channel", "Profile", "PhaseBreakdown",
            "EDGE_TX2_CLASS", "CLOUD_TITANXP_CLASS", "CLOUD_TPU_V5E_CHIP",
            "layer_time", "subgraph_time", "tpu_v5e_pod",
-           "collab_decode_step_time"]
+           "collab_decode_step_time", "speculative_round_time",
+           "expected_accepted_tokens"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,17 +89,25 @@ Profile = Mapping[str, float]
 
 @dataclasses.dataclass(frozen=True)
 class PhaseBreakdown:
-    """Per-phase latency split of a collaborative serving request:
-    one-time prefill, per-token decode compute (edge + cloud), and the
-    wireless transfer of the boundary blob.  Mirrors the phase fields
-    ``ServeStats`` measures, so predictions and measurements line up."""
+    """Per-phase latency split of a collaborative serving round:
+    one-time prefill, decode compute (edge + cloud), and the wireless
+    transfer of the boundary blob.  Mirrors the phase fields
+    ``ServeStats`` measures, so predictions and measurements line up.
+    ``tokens`` is the expected number of *accepted* tokens the round
+    commits (1 for the non-speculative step), so ``per_token_s`` is the
+    per-accepted-token cost the spec-k auto-tuner minimizes."""
     prefill_s: float = 0.0
     decode_s: float = 0.0
     channel_s: float = 0.0
+    tokens: float = 1.0
 
     @property
     def total_s(self) -> float:
         return self.prefill_s + self.decode_s + self.channel_s
+
+    @property
+    def per_token_s(self) -> float:
+        return self.total_s / max(self.tokens, 1e-9)
 
 
 def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
@@ -120,6 +129,55 @@ def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
     channel_s = (channel.transfer_time(blob_bytes)
                  + channel.transfer_time(return_bytes))
     return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s)
+
+
+def expected_accepted_tokens(k: int, acceptance: float) -> float:
+    """Expected tokens a draft/verify round of length k commits, with
+    i.i.d. per-position draft accuracy ``acceptance``: the round always
+    commits the verify's corrected token and extends one position per
+    leading accepted draft, so E = sum_{i=0}^{k-1} acceptance^i."""
+    if acceptance >= 1.0:
+        return float(k)
+    return (1.0 - acceptance ** k) / (1.0 - acceptance)
+
+
+def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
+                           blob_bytes: float, edge: DeviceModel,
+                           cloud: DeviceModel, channel: Channel,
+                           draft_flops: float = 0.0,
+                           acceptance: float = 1.0,
+                           return_bytes: float = 4.0,
+                           rows: int = 1) -> PhaseBreakdown:
+    """Predicted cost of one speculative *draft/verify round* of length
+    ``k`` (the flop/byte arguments are per-step quantities, exactly
+    ``collab_decode_step_time``'s).
+
+    The edge pays k serial prefix steps plus — when actually drafting
+    (k > 1) — k local INT8 suffix steps (``draft_flops``); the cloud
+    verifies all k positions in ONE batched multi-token step (k× the
+    flops, one launch); the channel carries one uplink (k boundary
+    deltas + the k-1 graded draft-token ids, 4 B each across ``rows``
+    live requests) and one downlink (the sampled/corrected token plus,
+    for k > 1, a byte-packed accept mask) — so the RTT is paid once per
+    round instead of once per token.  ``tokens`` in the returned
+    breakdown is the expected accepted-token count at the given
+    per-position draft ``acceptance``, making ``per_token_s`` the
+    quantity ``autotune.tune_spec_k`` minimizes.
+
+    ``k=1`` recovers ``collab_decode_step_time`` exactly: no draft
+    model, no mask, one delta, one token — the auto-tuner can always
+    fall back to today's serial step."""
+    edge_step = edge_flops / edge.peak_ops_int8 + edge.launch_overhead_s
+    draft_step = draft_flops / edge.peak_ops_int8 + edge.launch_overhead_s
+    edge_s = k * edge_step + (k * draft_step if k > 1 else 0.0)
+    cloud_s = (k * cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
+               + cloud.launch_overhead_s)
+    uplink = k * blob_bytes + (k - 1) * 4.0 * rows
+    downlink = return_bytes + (float(-(-k // 8)) * rows if k > 1 else 0.0)
+    channel_s = (channel.transfer_time(uplink)
+                 + channel.transfer_time(downlink))
+    return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s,
+                          tokens=expected_accepted_tokens(k, acceptance))
 
 
 def layer_time(node: Node, dev: DeviceModel, *, precision: str,

@@ -1,5 +1,6 @@
-"""Pallas TPU kernel: paged flash-decode attention over an INT8 block-table
-KV cache.
+"""Pallas TPU kernel: paged flash attention over an INT8 block-table
+KV cache — one query row (decode) or a small q-block (speculative
+verify, multi-token prefill).
 
 Serving-side counterpart of ``int8_matmul``: where that kernel keeps the
 paper's edge GEMMs at 1 B/elem, this one keeps the *KV cache* at 1 B/elem
@@ -9,33 +10,54 @@ variant); each sequence owns a row of a block table mapping its logical
 page index to a physical page, so HBM is allocated on demand instead of
 ``max_len`` up front.
 
-One decode step = one grid cell per (batch row, kv head, logical page):
+One attention call = one grid cell per (batch row, kv head, logical page):
 
   grid = (B, n_kv, pages_per_seq), pages innermost ("arbitrary" — the
   online-softmax state m/l/acc lives in VMEM scratch across the page axis)
 
-The block table and per-row lengths ride in scalar-prefetch SMEM so the
-K/V BlockSpec index maps can redirect the page DMA:
+The block table, per-row KV lengths, and per-row *query start positions*
+ride in scalar-prefetch SMEM so the K/V BlockSpec index maps can redirect
+the page DMA:
 
-  index_map = lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)
+  index_map = lambda b, h, p, bt, ln, qs: (bt[b, p], 0, h, 0)
+
+The q tile carries all S query rows of the block (S=1 for plain decode):
+query i of row b sits at absolute position ``q_start[b] + i`` and may
+attend KV positions ``<= q_start[b] + i`` that are also ``< lengths[b]``
+— the *intra-block causal mask* that makes the same kernel serve
+
+* **decode** (S=1, ``q_start = lengths - 1``): the PR-2 behavior, bit
+  for bit;
+* **speculative verify** (S=k drafts written at ``q_start = committed
+  length``): k queries attend cache + the in-flight draft block, and a
+  rejected suffix is "rolled back" simply by never advancing the
+  committed length past it — stale page entries are masked out by
+  causality on every later read;
+* **paged multi-token prefill** (S=prompt bucket, ``q_start = 0``):
+  prompts attend their just-written pages directly, so prefill and
+  decode share one read path (and one set of INT8 scales).
 
 INT8 K/V are dequantized *inside* the QK/AV loops — per-(layer, kv-head)
 symmetric scales (optionally calibrated per slot, so shaped [B, n_kv])
 sit in SMEM and multiply the page tile right after load, so the MXU sees
 f32 while HBM only ever streams 1 B/elem.  GQA runs grouped: the q heads
-sharing a kv head form the sublane dim of the score tile.
+sharing a kv head form the sublane dim of the score tile, and a q-block
+of S tokens stacks to an (S·group, hd) tile.
 
 Off-TPU there are two fallbacks, mirroring ``ops.int8_matmul``:
 ``interpret=True`` runs the very same kernel through the Pallas
 interpreter (used by the parity tests), while the serving engines default
-to ``paged_attention_ref`` — an XLA implementation of identical math that
-is fast enough to benchmark on CPU.  ``paged_attention`` dispatches.
+to ``paged_attention_ref``/``paged_attention_mq_ref`` — XLA
+implementations of identical math that are fast enough to benchmark on
+CPU.  ``paged_attention`` / ``paged_multiquery_attention`` dispatch.
 
-VMEM residency per grid cell (defaults, page_size=64, hd=128, group=8):
-  K page  int8 [page_size, hd]   8 KiB      m, l  f32 [group, 1]
-  V page  int8 [page_size, hd]   8 KiB      acc   f32 [group, hd] 4 KiB
+VMEM residency per grid cell (defaults, page_size=64, hd=128, group=8,
+S=8):
+  K page  int8 [page_size, hd]   8 KiB      m, l  f32 [S·group, 1]
+  V page  int8 [page_size, hd]   8 KiB      acc   f32 [S·group, hd] 32 KiB
 all « 16 MiB; on real TPU prefer page_size a multiple of 32 (int8
-sublane) and group padded to 8 — the interpret/ref paths accept any size.
+sublane) and S·group padded to 8 — the interpret/ref paths accept any
+size.
 """
 from __future__ import annotations
 
@@ -50,7 +72,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import compiler_params
 
-__all__ = ["paged_attention", "paged_flash_decode", "paged_attention_ref"]
+__all__ = ["paged_attention", "paged_multiquery_attention",
+           "paged_flash_decode", "paged_flash_mq",
+           "paged_attention_ref", "paged_attention_mq_ref"]
 
 # finite stand-in for -inf: (-1e30) - (-1e30) = 0 keeps exp() NaN-free on
 # fully-masked pages, where true -inf would poison the running max
@@ -61,12 +85,12 @@ _MASKED = -1e30
 _DEFAULT_IMPL = "auto"
 
 
-def _kernel(bt_ref, len_ref,            # scalar-prefetch: block table, lens
-            q_ref, k_ref, v_ref,        # [1,1,G,hd], [1,P,1,hd], [1,P,1,hd]
+def _kernel(bt_ref, len_ref, qs_ref,    # scalar-prefetch: table, lens, q0
+            q_ref, k_ref, v_ref,        # [1,1,S·G,hd], [1,P,1,hd], [1,P,1,hd]
             ks_ref, vs_ref,             # (1,1) SMEM per-(row, kv-head) scale
-            o_ref,                      # [1,1,G,hd]
+            o_ref,                      # [1,1,S·G,hd]
             m_ref, l_ref, acc_ref,      # scratch: online-softmax state
-            *, page_size: int, sm_scale: float):
+            *, page_size: int, group: int, sm_scale: float):
     b, h, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -79,13 +103,18 @@ def _kernel(bt_ref, len_ref,            # scalar-prefetch: block table, lens
     # scalar broadcast fused into the VPU convert
     k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]   # [P, hd]
     v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]
-    q = q_ref[0, 0].astype(jnp.float32) * sm_scale             # [G, hd]
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale             # [S·G, hd]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [G, P]
+                            preferred_element_type=jnp.float32)  # [S·G, P]
+    sg = q.shape[0]
     pos = p * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, (1, page_size), 1)
-    valid = pos < len_ref[b]                                     # [1, P]
+        jnp.int32, (sg, page_size), 1)
+    # row r of the tile is query token r // group at absolute position
+    # q_start + r // group: intra-block causality + the KV length bound
+    qpos = qs_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (sg, page_size), 0) // group
+    valid = jnp.logical_and(pos <= qpos, pos < len_ref[b])      # [S·G, P]
     s = jnp.where(valid, s, _MASKED)
 
     m_prev = m_ref[...]
@@ -119,52 +148,57 @@ def _norm_scales(scale: Optional[jax.Array], batch: int,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_flash_decode(
-    q: jax.Array,                  # [B, n_heads, hd]
+def paged_flash_mq(
+    q: jax.Array,                  # [B, S, n_heads, hd]
     k_pages: jax.Array,            # [n_pages, page_size, n_kv, hd] int8|fp
     v_pages: jax.Array,
     block_tables: jax.Array,       # [B, pages_per_seq] int32
     lengths: jax.Array,            # [B] int32, # of valid KV entries
+    q_start: jax.Array,            # [B] int32, abs position of query row 0
     k_scale: Optional[jax.Array] = None,   # [n_kv] or [B, n_kv]
     v_scale: Optional[jax.Array] = None,
     *,
     interpret: bool = False,
 ) -> jax.Array:
-    """One flash-decode step over the paged cache → [B, n_heads, hd]."""
-    b, n_heads, hd = q.shape
+    """Flash attention of an S-query block over the paged cache →
+    [B, S, n_heads, hd] (query i attends positions <= q_start + i)."""
+    b, s, n_heads, hd = q.shape
     _, page_size, n_kv, _ = k_pages.shape
     pages_per_seq = block_tables.shape[1]
     group = n_heads // n_kv
     assert group * n_kv == n_heads, (n_heads, n_kv)
 
-    qg = q.reshape(b, n_kv, group, hd)
+    # [B, n_kv, S·group, hd]: the q heads sharing a kv head — for every
+    # query token of the block — form the sublane dim of one tile
+    qg = q.reshape(b, s, n_kv, group, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, n_kv, s * group, hd)
     ks = _norm_scales(k_scale, b, n_kv)
     vs = _norm_scales(v_scale, b, n_kv)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, n_kv, pages_per_seq),
         in_specs=[
-            pl.BlockSpec((1, 1, group, hd),
-                         lambda b_, h, p, bt, ln: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, s * group, hd),
+                         lambda b_, h, p, bt, ln, qs: (b_, h, 0, 0)),
             pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b_, h, p, bt, ln: (bt[b_, p], 0, h, 0)),
+                         lambda b_, h, p, bt, ln, qs: (bt[b_, p], 0, h, 0)),
             pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b_, h, p, bt, ln: (bt[b_, p], 0, h, 0)),
-            pl.BlockSpec((1, 1), lambda b_, h, p, bt, ln: (b_, h),
+                         lambda b_, h, p, bt, ln, qs: (bt[b_, p], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h, p, bt, ln, qs: (b_, h),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1), lambda b_, h, p, bt, ln: (b_, h),
+            pl.BlockSpec((1, 1), lambda b_, h, p, bt, ln, qs: (b_, h),
                          memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, group, hd),
-                               lambda b_, h, p, bt, ln: (b_, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, s * group, hd),
+                               lambda b_, h, p, bt, ln, qs: (b_, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((group, 1), jnp.float32),      # running max
-            pltpu.VMEM((group, 1), jnp.float32),      # running denominator
-            pltpu.VMEM((group, hd), jnp.float32),     # un-normalized out
+            pltpu.VMEM((s * group, 1), jnp.float32),    # running max
+            pltpu.VMEM((s * group, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((s * group, hd), jnp.float32),   # un-normalized out
         ],
     )
-    kernel = functools.partial(_kernel, page_size=page_size,
+    kernel = functools.partial(_kernel, page_size=page_size, group=group,
                                sm_scale=1.0 / math.sqrt(hd))
     out = pl.pallas_call(
         kernel,
@@ -173,26 +207,51 @@ def paged_flash_decode(
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(block_tables, lengths, qg, k_pages, v_pages, ks, vs)
-    return out.reshape(b, n_heads, hd)
+    )(block_tables, lengths, q_start.astype(jnp.int32), qg, k_pages,
+      v_pages, ks, vs)
+    return out.reshape(b, n_kv, s, group, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, s, n_heads, hd)
 
 
-def paged_attention_ref(
-    q: jax.Array,
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(
+    q: jax.Array,                  # [B, n_heads, hd]
     k_pages: jax.Array,
     v_pages: jax.Array,
     block_tables: jax.Array,
     lengths: jax.Array,
     k_scale: Optional[jax.Array] = None,
     v_scale: Optional[jax.Array] = None,
+    *,
+    interpret: bool = False,
 ) -> jax.Array:
-    """Pure-XLA oracle for the kernel — same math, gather-based.
+    """One flash-decode step over the paged cache → [B, n_heads, hd]
+    (the S=1 case of ``paged_flash_mq``: the single query sits at the
+    last valid position, so the causal mask degenerates to the length
+    bound and PR-2 semantics are preserved exactly)."""
+    out = paged_flash_mq(q[:, None], k_pages, v_pages, block_tables,
+                         lengths, lengths - 1, k_scale, v_scale,
+                         interpret=interpret)
+    return out[:, 0]
+
+
+def paged_attention_mq_ref(
+    q: jax.Array,                  # [B, S, n_heads, hd]
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    q_start: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Pure-XLA oracle for the q-block kernel — same math, gather-based.
 
     Also the production path off-TPU: it touches only the pages named in
     the block table (HBM/DRAM traffic ∝ allocated pages, not max_len),
     so the engines' CPU benchmarks measure the same asymptotics the TPU
     kernel delivers."""
-    b, n_heads, hd = q.shape
+    b, s, n_heads, hd = q.shape
     _, page_size, n_kv, _ = k_pages.shape
     group = n_heads // n_kv
     span = block_tables.shape[1] * page_size
@@ -204,14 +263,39 @@ def paged_attention_ref(
     k = k * ks[:, None, :, None]
     v = v * vs[:, None, :, None]
 
-    qg = q.reshape(b, n_kv, group, hd).astype(jnp.float32) / math.sqrt(hd)
-    s = jnp.einsum("bhgd,blhd->bhgl", qg, k)
-    mask = jnp.arange(span)[None, None, None, :] \
-        < lengths[:, None, None, None]
-    s = jnp.where(mask, s, _MASKED)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgl,blhd->bhgd", p, v)
-    return out.reshape(b, n_heads, hd).astype(q.dtype)
+    qg = q.reshape(b, s, n_kv, group, hd).astype(jnp.float32) / math.sqrt(hd)
+    logits = jnp.einsum("bsngd,blnd->bnsgl", qg, k)
+    pos = jnp.arange(span)
+    qpos = q_start[:, None] + jnp.arange(s)[None, :]            # [B, S]
+    mask = jnp.logical_and(
+        pos[None, None, :] <= qpos[:, :, None],
+        pos[None, None, :] < lengths[:, None, None])            # [B, S, L]
+    logits = jnp.where(mask[:, None, :, None, :], logits, _MASKED)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnsgl,blnd->bsngd", p, v)
+    return out.reshape(b, s, n_heads, hd).astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """S=1 oracle (decode): the query sits at the last valid position."""
+    out = paged_attention_mq_ref(q[:, None], k_pages, v_pages, block_tables,
+                                 lengths, lengths - 1, k_scale, v_scale)
+    return out[:, 0]
+
+
+def _resolve_impl(impl: Optional[str]) -> str:
+    impl = impl or _DEFAULT_IMPL
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
 
 
 def paged_attention(
@@ -225,16 +309,39 @@ def paged_attention(
     *,
     impl: Optional[str] = None,
 ) -> jax.Array:
-    """Dispatching front door: Pallas kernel on TPU, XLA ref elsewhere.
+    """Dispatching front door (decode, q [B, n_heads, hd]): Pallas
+    kernel on TPU, XLA ref elsewhere.
 
     ``impl``: "auto" (default), "pallas", "pallas_interpret", or "ref".
     """
-    impl = impl or _DEFAULT_IMPL
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    impl = _resolve_impl(impl)
     if impl == "ref":
         return paged_attention_ref(q, k_pages, v_pages, block_tables,
                                    lengths, k_scale, v_scale)
     return paged_flash_decode(q, k_pages, v_pages, block_tables, lengths,
                               k_scale, v_scale,
                               interpret=(impl == "pallas_interpret"))
+
+
+def paged_multiquery_attention(
+    q: jax.Array,                  # [B, S, n_heads, hd]
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    q_start: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    *,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Dispatching front door for an S-query block (speculative verify,
+    paged multi-token prefill): same dispatch rules as
+    ``paged_attention``."""
+    impl = _resolve_impl(impl)
+    if impl == "ref":
+        return paged_attention_mq_ref(q, k_pages, v_pages, block_tables,
+                                      lengths, q_start, k_scale, v_scale)
+    return paged_flash_mq(q, k_pages, v_pages, block_tables, lengths,
+                          q_start, k_scale, v_scale,
+                          interpret=(impl == "pallas_interpret"))

@@ -303,9 +303,9 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     additionally takes ``block_tables`` [B, pages_per_seq] mapping each
     row's logical pages to physical pages in the shared pool.  Writes
     scatter into table-mapped pages; decode reads (S=1) go through the
-    paged flash-decode kernel, while prefill (S>1, cache rows empty)
-    attends over the just-computed K/V directly through ``_sdpa`` — the
-    reference einsum stays the fallback/oracle path.  With an INT8 page
+    paged flash-decode kernel, and S>1 reads (multi-token prefill, the
+    speculative verify block) go through the same kernel's q-block form
+    with intra-block causal masking.  With an INT8 page
     pool, ``calibrate_kv=True`` (prefill) derives fresh per-(row, head)
     symmetric scales from the prompt's K/V instead of reading the
     ``k_scale``/``v_scale`` cache entries that decode steps replay.
@@ -318,18 +318,19 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     kh = dense(p["wk"], x, qctx=qctx, name=f"{name}/k").reshape(b, s, n_kv, hd)
     vh = dense(p["wv"], x, qctx=qctx, name=f"{name}/v").reshape(b, s, n_kv, hd)
 
-    # vector cache_index [B] = per-slot decode positions (continuous
-    # batching); requires the single-token decode shape.
+    # vector cache_index [B] = per-slot positions (continuous batching).
+    # S may exceed 1: a speculative verify step writes/attends a k-token
+    # block starting at each slot's own position.
     vec_index = (cache_index is not None and jnp.ndim(cache_index) == 1)
-    assert not vec_index or s == 1, "per-slot cache_index needs S=1 decode"
 
     q_offset = 0
     if rope is not None:
         cos, sin = rope
         if kv_cache is not None and cache_index is not None:
             if vec_index:
-                cos_q = jnp.take(cos, cache_index, axis=0)[:, None]  # [B,1,·]
-                sin_q = jnp.take(sin, cache_index, axis=0)[:, None]
+                tpos = cache_index[:, None] + jnp.arange(s)[None]  # [B, S]
+                cos_q = jnp.take(cos, tpos, axis=0)                # [B,S,·]
+                sin_q = jnp.take(sin, tpos, axis=0)
             else:
                 cos_q = jax.lax.dynamic_slice_in_dim(cos, cache_index, s,
                                                      axis=0)
@@ -363,9 +364,10 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
             k_w = kh.astype(kv_cache["k"].dtype)
             v_w = vh.astype(kv_cache["v"].dtype)
         if vec_index:
-            b_idx = jnp.arange(b)
-            k_all = kv_cache["k"].at[b_idx, cache_index].set(k_w[:, 0])
-            v_all = kv_cache["v"].at[b_idx, cache_index].set(v_w[:, 0])
+            b_idx = jnp.arange(b)[:, None]
+            tpos = cache_index[:, None] + jnp.arange(s)[None]     # [B, S]
+            k_all = kv_cache["k"].at[b_idx, tpos].set(k_w)
+            v_all = kv_cache["v"].at[b_idx, tpos].set(v_w)
         else:
             k_all = jax.lax.dynamic_update_slice_in_dim(
                 kv_cache["k"], k_w, cache_index, axis=1)
@@ -405,10 +407,12 @@ def _paged_cache_attention(cache: Dict[str, jax.Array], qh: jax.Array,
     """Write new K/V into block-table pages, then attend.
 
     qh/kh/vh: [B, S, H(, kv), D] post-RoPE.  Decode (S=1) reads back
-    through ``kernels.paged_attention``; prefill (S>1 into empty rows)
-    attends over the current tokens' (fake-quantized) K/V via ``_sdpa``.
+    through ``kernels.paged_attention``; S>1 blocks (prefill, the
+    speculative verify step) read back through its multi-query form —
+    one paged read path for every phase.
     """
-    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_multiquery_attention)
 
     b, s = kh.shape[:2]
     page_size = cache["k_pages"].shape[1]
@@ -441,7 +445,7 @@ def _paged_cache_attention(cache: Dict[str, jax.Array], qh: jax.Array,
 
     # logical position of every written token, [B, S]
     if vec_index:
-        t = cache_index[:, None]
+        t = cache_index[:, None] + jnp.arange(s)[None]
     else:
         t = jnp.broadcast_to(
             (cache_index + jnp.arange(s))[None], (b, s))
@@ -464,19 +468,23 @@ def _paged_cache_attention(cache: Dict[str, jax.Array], qh: jax.Array,
                               vs if quantized else None)
         return out[:, None].astype(dtype), new_cache
 
-    # prefill: rows are empty, so the causal context is exactly the
-    # current kh/vh — but read through the cache's lattice so prefill
-    # logits match what decode will later reconstruct from the pages
-    if quantized:
-        kh = k_w.astype(dtype) * ks[:, None, :, None].astype(dtype)
-        vh = v_w.astype(dtype) * vs[:, None, :, None].astype(dtype)
-    if n_kv != n_heads:
-        rep = n_heads // n_kv
-        kh = jnp.repeat(kh, rep, axis=2)
-        vh = jnp.repeat(vh, rep, axis=2)
-    out = _sdpa(qh, kh, vh, causal=True,
-                q_offset=0 if vec_index else cache_index, q_chunk=q_chunk)
-    return out, new_cache
+    # q-block read (speculative verify / multi-token prefill): the S
+    # queries attend cache + the just-written block through the paged
+    # kernel's intra-block causal mask.  Query i of row b sits at
+    # q_start[b] + i; ``kv_lengths`` (true prompt lengths) keeps bucket
+    # padding out of a prefill read, while a verify read's stale entries
+    # beyond each query's position — rolled-back drafts of an earlier
+    # round — are masked by causality.  Reading back through the pages
+    # also means prefill sees the cache's INT8 lattice, so prefill
+    # logits match what decode later reconstructs from the same pages.
+    start = cache_index if vec_index else jnp.full((b,), cache_index)
+    lengths = (start + s) if kv_lengths is None else kv_lengths
+    out = paged_multiquery_attention(qh.astype(jnp.float32), k_pages,
+                                     v_pages, block_tables,
+                                     lengths.astype(jnp.int32), start,
+                                     ks if quantized else None,
+                                     vs if quantized else None)
+    return out.astype(dtype), new_cache
 
 
 # -- MLPs ---------------------------------------------------------------------

@@ -283,10 +283,18 @@ def run_blocks(blocks: Params, x: jax.Array, cfg: LMConfig, *,
     and the collaborative engines: the edge prefix and the cloud suffix
     each call it on their own block slice + KV cache.  ``cache_index``
     may be a scalar (uniform position) or a [B] vector of per-slot
-    positions.  INT8 caches (``k_scale`` entries) are handled uniformly;
-    paged caches (``k_pages`` entries, see ``init_cache``) additionally
-    need ``block_tables`` and pass ``calibrate_kv=True`` at prefill so
-    per-slot INT8 scales are derived from the prompt.
+    positions; with a vector index ``x`` may carry S > 1 tokens per row
+    — the speculative verify step runs all k drafted positions of every
+    slot through one cached call, each query causally masked to its own
+    ``cache_index + i`` (and a rejected suffix is rolled back simply by
+    not advancing the caller's per-slot position).  INT8 caches
+    (``k_scale`` entries) are handled uniformly; paged caches
+    (``k_pages`` entries, see ``init_cache``) additionally need
+    ``block_tables`` and pass ``calibrate_kv=True`` at prefill so
+    per-slot INT8 scales are derived from the prompt — prefill reads,
+    like decode and verify reads, go through the paged kernel
+    (``kernels.paged_attention``), so every phase shares one lattice and
+    one read path.
     """
     if cache is None:
         def body_nc(x, bp):
@@ -372,7 +380,8 @@ def decode_step(params: Params, token: jax.Array, cache: Dict[str, jax.Array],
     per-slot positions (continuous batching).  Handles bf16,
     INT8-quantized, and paged caches (scale entries ride along in the
     cache dict and are sliced per layer by the scan; paged caches route
-    the read through the paged flash-decode kernel)."""
+    the read through the paged flash-decode kernel — the S=1 case of
+    the q-block kernel the speculative verify uses via ``run_blocks``)."""
     span = _cache_span(cache, block_tables)
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
     rope = L.rope_table(span, cfg.hd, base=cfg.rope_base, dtype=cfg.dtype)

@@ -5,11 +5,14 @@ Both engines share one slot-based continuous-batching scheduler
 (``_SlotEngine``): requests queue up, prompts are right-padded to
 power-of-two *buckets* and same-bucket prompts are prefilled together
 into free cache slots (bounding the number of distinct compiled prefill
-shapes — see ``trace_counts``), every decode step advances all occupied
-slots at their own positions (vector ``cache_index``), and a finished
-request frees its slot — and its KV pages — for the next queued prompt
-mid-flight.  Sampled tokens stay on device for the whole generation; the
-host sees them once, after the last step.
+shapes — see ``trace_counts``), every **round** advances all occupied
+slots at their own positions (vector ``cache_index``) by one or more
+committed tokens, and a finished request frees its slot — and its KV
+pages — for the next queued prompt mid-flight, including *mid-round*
+when a round commits past its budget.  Sampled tokens stay on device for
+the whole generation; the host sees them once, after the last round (a
+speculative engine additionally syncs one small per-round accept-count
+vector, which the edge needs anyway to schedule the next round).
 
 KV cache layouts (see ``transformer.init_cache`` for shapes):
 
@@ -17,9 +20,9 @@ KV cache layouts (see ``transformer.init_cache`` for shapes):
   decode einsum streams the whole ``[B, max_len]`` cache each step.
 * **paged** — slots own a block-table row into a shared page pool
   (``PageAllocator``); HBM is claimed page-by-page at admission and
-  returned at retirement, and the decode read runs the paged
-  flash-decode kernel (``kernels.paged_attention``) whose cost scales
-  with *allocated* pages, not ``max_len``.
+  returned at retirement, and reads run the paged flash kernel
+  (``kernels.paged_attention``) whose cost scales with *allocated*
+  pages, not ``max_len``.
 * **paged + INT8** — pages store 1 B/elem with per-slot symmetric
   scales calibrated from each prompt at prefill (paper Eq.1 applied to
   serving state); dequantization happens inside the kernel's QK/AV
@@ -32,24 +35,70 @@ stack (dense fp by default; ``paged=True``/``int8_kv=True`` opt in).
 *incremental decode*: the INT8 edge prefix (first ``cut_layer+1``
 blocks, fake-quant lattice == the Pallas int8 kernel's math) and the
 FP32 cloud suffix each own a KV cache covering only their block
-sub-range.  The edge cache defaults to the **paged INT8** layout — the
-paper's storage/bandwidth axis applied to decode state on the
-memory-constrained device.  After a one-time split prefill, each decode
-step runs just the new token through the edge blocks, quantizes a single
-``[B, 1, D]`` boundary delta per Eq.(1), "transmits" those few bytes
-through the simulated wireless channel, dequantizes per Eq.(2), and
-finishes on the cloud side — so per-token wire traffic is O(1) in
-sequence length instead of re-shipping the whole boundary blob.  All
-phase functions (edge/cloud x prefill/decode) are jit'd once; decode
-shapes are fixed, so there is no per-step recompilation.  The auto-tuner
-(Algorithm 1) chooses the cut.
+sub-range.  Both sides default to the **paged INT8** layout and share
+one block table, so edge and cloud track identical page geometry and a
+verify-round rollback is a per-slot length decrement on either side.
+The auto-tuner (Algorithm 1) chooses the cut; a second auto-tuner
+(``autotune.tune_spec_k``) chooses the draft length ``spec_k``.
+
+Draft/verify wire protocol (``spec_k = k``)
+-------------------------------------------
+With ``spec_k == 1`` (the default) every decode round is PR 1's
+incremental step, bit for bit: the edge runs the new token through its
+INT8 prefix, ships one per-row-quantized ``[B, 1, D]`` boundary delta
+(Eq.1) uplink, the cloud suffix finishes the token and returns it
+4 B/row downlink.  Channel RTT is paid twice per generated token.
+
+With ``spec_k = k > 1`` the serial loop is restructured into
+**draft/verify rounds** that amortize that RTT over up to ``k`` tokens:
+
+1. **Draft (edge, local).**  Starting from the last committed token,
+   the edge runs the *full* split model ``k`` times at low precision —
+   its INT8 prefix over the paged INT8 edge cache, then a lightweight
+   INT8 copy of the cloud-suffix weights (the same fake-quant lattice
+   the prefix uses) over a local *draft* KV cache that shares the edge
+   block table.  Each step emits the Eq.(1)-quantized boundary delta
+   and greedily drafts the next token from the local suffix.
+2. **Uplink (one transfer).**  The edge ships the concatenated
+   ``[B, k, D]`` quantized boundary blob — each of the k rows framed
+   with its own per-row scale/zero-point so the cloud dequantizes
+   exactly what a serial step would have seen — plus the ``k-1`` draft
+   tokens the cloud must grade (4 B each).  One channel traversal.
+3. **Verify (cloud, one batched step).**  The cloud suffix runs all
+   ``k`` positions in a single multi-token cached step (the paged
+   kernel's q-block form attends cache + the in-flight block under an
+   intra-block causal mask) and takes the longest prefix of drafts that
+   match its own greedy tokens: ``n_commit = 1 + #leading matches`` —
+   the corrected/next token at the first divergence is always
+   committed, so a round commits between 1 and k tokens and ``k = 1``
+   degenerates to the non-speculative step.
+4. **Rollback (both sides, O(1)).**  Rejected positions are *not*
+   erased: both sides simply keep their per-slot committed length at
+   ``pos + n_commit``.  Paged block tables make this exact — later
+   reads mask stale entries by causality/length and later writes
+   overwrite them in place — so rollback is a length decrement, never a
+   copy.
+5. **Downlink (one transfer).**  The cloud returns the accept mask
+   (``ceil(k/8)`` B/row) and the corrected token (4 B/row); the edge
+   rolls back its own prefix + draft caches the same way and starts the
+   next round.  One channel traversal.
+
+Accounting: ``ServeStats`` charges the uplink blob + draft tokens as
+decode bytes, the accept-mask + token return as decode downlink bytes,
+and counts *accepted* tokens — ``bytes_per_decode_token`` is uplink
+bytes per accepted token (comparable with PR 1/PR 2 numbers, where
+every token was trivially accepted) and
+``wire_bytes_per_accepted_token`` adds the downlink.  Every message
+additionally pays a fixed protocol header (``_MSG_BYTES``) — charged
+once per round instead of once per token, which together with the RTT
+is what speculation buys on the wire.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +113,12 @@ Params = Any
 
 # wire framing overhead for one quantized blob: f32 scale + f32 zero-point
 _QP_BYTES = 8
+# wire bytes for one token id (cloud→edge return / edge→cloud draft)
+_TOK_BYTES = 4
+# per-*message* protocol framing (TCP/IP-class headers + slot ids/round
+# counter): every channel traversal pays it once, which is exactly what a
+# draft/verify round amortizes k-fold alongside the RTT
+_MSG_BYTES = 64
 
 
 def _cdiv(a: int, b: int) -> int:
@@ -76,6 +131,18 @@ def _bucket_len(plen: int, max_len: int) -> int:
     while b < plen:
         b *= 2
     return min(b, max_len)
+
+
+def _jit_phase(fn, donate: Tuple[int, ...] = ()):
+    """``jax.jit`` with the KV-cache argument(s) donated, so the page-pool
+    scatter of every prefill/decode/verify updates the cache *in place*
+    on TPU/GPU instead of doubling resident cache bytes per step.  The
+    engines always consume the returned cache and never touch the donated
+    buffer again, so donation is safe.  XLA:CPU ignores donation and
+    warns per call, so off-accelerator we jit plain."""
+    if donate and jax.default_backend() in ("tpu", "gpu"):
+        return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(fn)
 
 
 # ---------------------------------------------------------------------------
@@ -126,8 +193,12 @@ class _PagedPool:
     """Block table + allocator for one engine-side page pool.
 
     Pages for a request are claimed once at admission — enough to cover
-    its padded prompt plus its (known) generation budget — and returned
-    the moment the scheduler retires the slot.
+    its padded prompt plus its (known) generation budget, plus any
+    speculative-round headroom — and returned the moment the scheduler
+    retires the slot.  The collaborative engine shares one pool (one
+    block table) across its edge-prefix, cloud-suffix, and draft caches:
+    all three see identical page geometry, so a verify-round rollback is
+    the same length decrement on every cache.
     """
 
     def __init__(self, max_batch: int, pages_per_slot: int, num_pages: int,
@@ -184,10 +255,16 @@ class _PagedPool:
             self.bt[s, :] = 0
             self.bt[s, :len(pages)] = pages
         self._dev = None
+        # trim to the pages the padded prompt can touch: the prefill's
+        # q-block read costs O(table width), so handing it the full
+        # pages_per_slot row would make prefill scale with max_len
+        # instead of the bucket (the generation's later pages are only
+        # reachable by decode, which re-reads through table_dev)
+        width = max(1, _cdiv(padded_len, self.page_size))
         # explicit copy: jax on CPU may zero-copy-alias numpy buffers, and
         # ``bt`` is mutated on the host while async decode steps are still
         # in flight — sharing it would race
-        return jnp.array(self.bt[np.asarray(slots)], copy=True)
+        return jnp.array(self.bt[np.asarray(slots)][:, :width], copy=True)
 
     def retire(self, slot: int) -> None:
         pages = self._slot_pages.pop(int(slot), None)
@@ -253,17 +330,34 @@ class ServeStats:
     """Per-phase serving counters.
 
     ``transmitted_bytes`` is the total over the wire — prefill and
-    decode uplinks plus the cloud→edge sampled-token downlinks.  The
-    per-step ``decode_bytes_log`` records only the boundary-delta
-    uplinks: each entry is ``n_active * (D·itemsize + 8)``, i.e. one
-    per-row-quantized [1, D] delta per *live* request — it shrinks as
-    slots free and never grows with sequence length, which is the O(1)
-    per-token property.  Prefill uplinks are charged by each request's
-    *true* prompt length — bucket padding is a compile-shape artifact
-    and never crosses the wire.  ``prefill_s``/``decode_s`` are
-    wall-clock phase totals, populated when the engine runs with
-    ``timed=True`` (timing blocks on device results, so it is off by
-    default to keep the decode loop fully async)."""
+    decode uplinks plus every cloud→edge downlink, each *message*
+    carrying its ``_MSG_BYTES`` protocol header on top of the payload
+    (headers, like the RTT, are paid per traversal — the quantity a
+    draft/verify round amortizes k-fold).  ``decode_bytes`` is the
+    decode-phase *uplink*: per-row-quantized boundary deltas (one
+    ``[1, D]`` frame per live request per drafted position) plus, in
+    speculative rounds, the 4 B draft-token ids the cloud grades.  The
+    per-round ``decode_bytes_log`` records those uplinks: each entry
+    shrinks as slots free and never grows with sequence length, which
+    is the O(1)-per-token property.  ``downlink_bytes`` counts the
+    return direction — the sampled/corrected token (4 B/row) plus, in
+    speculative rounds, the accept mask (``ceil(k/8)`` B/row); its
+    decode-phase share is ``decode_downlink_bytes``.  Prefill uplinks
+    are charged by each request's *true* prompt length — bucket padding
+    is a compile-shape artifact and never crosses the wire.
+
+    ``decode_tokens`` counts **accepted (committed) tokens** — for the
+    non-speculative engines every decoded token is trivially accepted,
+    so the PR 1/PR 2 meaning is unchanged.  ``drafted_tokens`` /
+    ``draft_hits`` grade the speculative drafts the verify step
+    compared (k-1 per round per live slot), giving ``acceptance_rate``.
+    ``bytes_per_decode_token`` is uplink bytes per accepted token;
+    ``wire_bytes_per_accepted_token`` adds the decode downlink.
+
+    ``prefill_s``/``decode_s`` are wall-clock phase totals, populated
+    when the engine runs with ``timed=True`` (timing blocks on device
+    results, so it is off by default to keep the decode loop fully
+    async)."""
     prefill_calls: int = 0
     decode_steps: int = 0
     transmitted_bytes: int = 0
@@ -272,13 +366,30 @@ class ServeStats:
     prefill_bytes: int = 0
     decode_bytes: int = 0
     decode_bytes_log: List[int] = dataclasses.field(default_factory=list)
+    downlink_bytes: int = 0
+    decode_downlink_bytes: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
     prefill_tokens: int = 0
     decode_tokens: int = 0
+    # speculative draft/verify rounds
+    spec_rounds: int = 0
+    drafted_tokens: int = 0
+    draft_hits: int = 0
 
     def bytes_per_decode_token(self) -> float:
+        """Decode *uplink* bytes per accepted token (PR 1/PR 2 metric)."""
         return self.decode_bytes / max(self.decode_tokens, 1)
+
+    def wire_bytes_per_accepted_token(self) -> float:
+        """Both directions per accepted token: uplink deltas + drafts
+        and the downlink accept-mask + corrected token."""
+        return (self.decode_bytes + self.decode_downlink_bytes) \
+            / max(self.decode_tokens, 1)
+
+    def acceptance_rate(self) -> float:
+        """Fraction of graded speculative drafts the verify accepted."""
+        return self.draft_hits / max(self.drafted_tokens, 1)
 
     def report(self) -> Dict[str, float]:
         return {
@@ -286,10 +397,17 @@ class ServeStats:
             "decode_steps": self.decode_steps,
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
+            "accepted_tokens": self.decode_tokens,
             "transmitted_bytes": self.transmitted_bytes,
             "prefill_bytes": self.prefill_bytes,
             "decode_bytes": self.decode_bytes,
+            "downlink_bytes": self.downlink_bytes,
             "bytes_per_decode_token": self.bytes_per_decode_token(),
+            "wire_bytes_per_accepted_token":
+                self.wire_bytes_per_accepted_token(),
+            "spec_rounds": self.spec_rounds,
+            "drafted_tokens": self.drafted_tokens,
+            "acceptance_rate": self.acceptance_rate(),
             "channel_latency_s": self.channel_latency_s,
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,
@@ -300,11 +418,23 @@ class _SlotEngine:
     """Slot-based continuous-batching scheduler shared by both engines.
 
     Subclasses implement ``_admit`` (prefill a prompt group into specific
-    slots), ``_decode_all`` (advance every slot one token), and may hook
+    slots), ``_decode_all`` (advance every slot one token) and/or
+    ``_round`` (advance every slot by a *variable* number of committed
+    tokens — the speculative draft/verify round), and may hook
     ``_retire`` (a slot's request finished — e.g. return its KV pages).
     The scheduler keeps the current token and position of every slot on
     device; request outputs are transferred to the host once, after the
-    final step.
+    final round.
+
+    The loop is organised around **rounds**: admission commits one token
+    per new slot (the prefill's argmax), and every scheduler turn after
+    that commits ``counts[s]`` tokens per occupied slot, where the
+    non-speculative engines statically commit one (``counts is None`` —
+    no device sync, the loop stays fully async) and a speculative round
+    returns the verify step's per-slot accept counts.  Per-slot
+    accepted-length bookkeeping trims a round that overshoots a
+    request's budget and retires the slot mid-stream ("retire on
+    accept"), so the next queued prompt gets the slot and its pages.
 
     Admission pads each prompt group to a power-of-two bucket
     (``_bucket_len``), so the number of distinct prefill trace shapes is
@@ -320,7 +450,8 @@ class _SlotEngine:
         self.max_len = max_len
         self.timed = timed
         self.stats = ServeStats()
-        self.trace_counts = {"prefill": 0, "decode": 0}
+        self.trace_counts = {"prefill": 0, "decode": 0, "spec_draft": 0,
+                             "verify": 0}
 
     # -- subclass interface -------------------------------------------------
     def _admit(self, toks: jax.Array, plens: np.ndarray, max_news: np.ndarray,
@@ -331,6 +462,26 @@ class _SlotEngine:
     def _decode_all(self, cur: jax.Array, pos: jax.Array,
                     n_active: int) -> Tuple[jax.Array, jax.Array]:
         raise NotImplementedError
+
+    def _round(self, cur: jax.Array, pos: jax.Array, slots: np.ndarray,
+               ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                          Optional[np.ndarray]]:
+        """Advance the occupied ``slots`` by one round.
+
+        Returns ``(cur, pos, tokens, counts)``: ``tokens`` is the
+        ``[max_batch, k]`` device block of tokens the round produced and
+        ``counts`` the per-slot number of *committed* leading tokens —
+        ``None`` means "statically one per slot" (the non-speculative
+        path, which therefore never blocks on the device)."""
+        cur, pos = self._decode_all(cur, pos, len(slots))
+        return cur, pos, cur[:, None], None
+
+    def _round_headroom(self) -> int:
+        """Cache positions a round may write *past* a request's budget
+        (speculative drafting overshoots by up to k-1); admission
+        reserves them so overshoot writes can never alias another
+        request's pages."""
+        return 0
 
     def _retire(self, slot: int) -> None:
         """Hook: the request in ``slot`` finished (free paged KV, etc.)."""
@@ -371,13 +522,13 @@ class _SlotEngine:
 
     def _run(self, reqs: List[Request]) -> None:
         queue = deque(reqs)
-        active: Dict[int, Tuple[Request, int]] = {}   # slot -> (req, t0)
+        active: Dict[int, Tuple[Request, int]] = {}  # slot -> (req, n_committed)
         free = list(range(self.max_batch))
         cur = jnp.zeros((self.max_batch,), jnp.int32)
         pos = jnp.zeros((self.max_batch,), jnp.int32)
-        step_toks: List[jax.Array] = []
-        placements: List[Tuple[Request, int, int]] = []
-        step = 0
+        # every admission and every round logs (token block [B, k], takes);
+        # token blocks stay on device until one concat+transfer at the end
+        rounds: List[Tuple[jax.Array, List[Tuple[Request, int, int]]]] = []
         while queue or active:
             # admit queued prompts into free slots, grouping by prefill
             # bucket so one batched, fixed-shape prefill call covers the
@@ -391,8 +542,10 @@ class _SlotEngine:
                 while free and queue and _bucket_len(
                         len(queue[0].prompt), self.max_len) == bucket:
                     r = queue[0]
-                    assert len(r.prompt) + r.max_new_tokens <= self.max_len, \
-                        "prompt + generation exceeds cache max_len"
+                    assert (len(r.prompt) + r.max_new_tokens
+                            + self._round_headroom()) <= self.max_len, \
+                        "prompt + generation (+ draft headroom) exceeds " \
+                        "cache max_len"
                     if not self._can_admit(shapes, len(r.prompt),
                                            r.max_new_tokens, bucket):
                         stalled = True
@@ -416,37 +569,49 @@ class _SlotEngine:
                                         cur, pos))
                 self.stats.prefill_calls += 1
                 self.stats.prefill_tokens += int(plens.sum())
+                # the prefill's argmax is the group's first committed token
+                rounds.append((cur[:, None],
+                               [(r, s, 1) for r, s in zip(group, slots)]))
                 for r, s in zip(group, slots):
-                    active[s] = (r, step)
-                    placements.append((r, s, step))
+                    active[s] = (r, 1)
             if stalled and not active:
                 r = queue[0]
                 raise RuntimeError(
                     f"KV page pool too small for request uid={r.uid} "
                     f"(prompt {len(r.prompt)} + {r.max_new_tokens} new "
                     f"tokens) even with every slot idle")
-            step_toks.append(cur)
-            step += 1
-            # retire requests whose final token was just recorded — before
-            # decoding, so no request pays for a step it never reads and
-            # its slot (and KV pages) free one step earlier for the queue
-            for s in [s for s, (r, t0) in active.items()
-                      if step - t0 >= r.max_new_tokens]:
+            # retire requests whose budget just filled — before the next
+            # round, so no request pays for a round it never reads and
+            # its slot (and KV pages) free one round earlier for the queue
+            for s in [s for s, (r, c) in active.items()
+                      if c >= r.max_new_tokens]:
                 r, _ = active.pop(s)
                 r.done = True
                 self._retire(s)
                 free.append(s)
             if active:
-                cur, pos = self._timed(
+                act_slots = np.asarray(sorted(active), np.int32)
+                cur, pos, toks_r, counts = self._timed(
                     "decode_s",
-                    lambda: self._decode_all(cur, pos, len(active)))
+                    lambda: self._round(cur, pos, act_slots))
+                takes = []
+                for s in act_slots:
+                    r, c = active[int(s)]
+                    n = 1 if counts is None else int(counts[s])
+                    n = min(n, r.max_new_tokens - c)  # trim budget overshoot
+                    active[int(s)] = (r, c + n)
+                    takes.append((r, int(s), n))
+                rounds.append((toks_r, takes))
                 self.stats.decode_steps += 1
-                self.stats.decode_tokens += len(active)
+                self.stats.decode_tokens += sum(n for _, _, n in takes)
         # single device→host transfer for the whole run
-        all_toks = np.asarray(jnp.stack(step_toks, axis=0))  # [T, max_batch]
-        for r, s, t0 in placements:
-            r.out_tokens = [int(t)
-                            for t in all_toks[t0:t0 + r.max_new_tokens, s]]
+        all_toks = np.asarray(
+            jnp.concatenate([t for t, _ in rounds], axis=1))
+        col = 0
+        for toks_r, takes in rounds:
+            for r, s, n in takes:
+                r.out_tokens.extend(int(t) for t in all_toks[s, col:col + n])
+            col += toks_r.shape[1]
 
 
 class ServingEngine(_SlotEngine):
@@ -475,13 +640,13 @@ class ServingEngine(_SlotEngine):
                 self.cfg, max_batch, max_len, paged=True,
                 page_size=page_size, quantized=int8_kv,
                 num_pages=self._pool.allocator.num_pages, dtype=cache_dtype)
-            self._prefill = jax.jit(self._paged_prefill_impl)
+            self._prefill = _jit_phase(self._paged_prefill_impl, donate=(2,))
         else:
             self._cache = TF.init_cache(self.cfg, max_batch, max_len=max_len,
                                         dtype=cache_dtype,
                                         quantized=int8_kv)
-            self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl)
+            self._prefill = _jit_phase(self._prefill_impl, donate=(2,))
+        self._decode = _jit_phase(self._decode_impl, donate=(2,))
 
     def _prefill_impl(self, params, toks, cache, slots, cur, pos, plens):
         self.trace_counts["prefill"] += 1
@@ -554,21 +719,36 @@ class ServingEngine(_SlotEngine):
 class CollaborativeServingEngine(_SlotEngine):
     """Paper mode with incremental decode: INT8 edge prefix and FP32
     cloud suffix hold *split* KV caches over their own block sub-ranges;
-    each decode step ships one quantized ``[B, 1, D]`` boundary delta
-    (Eq.1/2) through the channel instead of the whole growing blob.
+    each decode round ships quantized boundary deltas (Eq.1/2) through
+    the channel instead of the whole growing blob.
 
-    The edge cache defaults to the paged INT8 layout: pages allocated on
-    demand through ``PageAllocator``, per-slot symmetric scales
-    calibrated from each prompt at edge prefill, and decode reads
-    through the paged flash-decode kernel.  ``edge_paged=False`` /
-    ``edge_int8=False`` fall back to the dense / fp layouts (the
-    PR-1-era configuration, kept as the equivalence oracle in tests)."""
+    Both caches default to the paged INT8 layout over **one shared block
+    table**: pages allocated on demand through ``PageAllocator``,
+    per-slot symmetric scales calibrated from each prompt at prefill,
+    reads through the paged flash kernel, and a rollback of rejected
+    speculative positions that is a per-slot length decrement on either
+    side of the cut.  ``edge_paged=False`` / ``edge_int8=False`` /
+    ``cloud_paged=False`` / ``cloud_int8=False`` fall back to the dense
+    / fp layouts (the PR-1-era configuration, kept as the equivalence
+    oracle in tests).
+
+    ``spec_k > 1`` turns each decode step into a speculative draft/verify
+    round (see the module docstring for the wire protocol): the edge
+    drafts k tokens locally through an INT8 copy of the cloud-suffix
+    weights over a draft cache that shares the edge block table, and the
+    cloud verifies all k in one batched multi-token step with
+    longest-prefix acceptance.  ``spec_k=1`` (default) is PR 1's serial
+    step, bit for bit.  ``spec_k="auto"`` asks ``autotune.tune_spec_k``
+    for the round length that minimizes predicted time per accepted
+    token on this engine's channel at ``spec_acceptance``."""
 
     def __init__(self, params: Params, cfg: TF.LMConfig, *, cut_layer: int,
                  channel: Optional[Channel] = None, max_len: int = 128,
                  a_bits: int = 8, max_batch: int = 4,
                  edge_paged: bool = True, edge_int8: bool = True,
-                 page_size: int = 16, edge_num_pages: Optional[int] = None,
+                 cloud_paged: bool = True, cloud_int8: bool = True,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 spec_k: Union[int, str] = 1, spec_acceptance: float = 0.8,
                  timed: bool = False):
         assert 0 <= cut_layer < cfg.n_layers, \
             f"cut_layer {cut_layer} outside [0, {cfg.n_layers})"
@@ -581,7 +761,16 @@ class CollaborativeServingEngine(_SlotEngine):
         self.n_cloud = cfg.n_layers - self.n_edge
         self.edge_paged = edge_paged
         self.edge_int8 = edge_int8
+        self.cloud_paged = cloud_paged
+        self.cloud_int8 = cloud_int8
         self.page_size = page_size
+        if spec_k == "auto":
+            from repro.core.autotune import spec_k_for_lm
+            spec_k = spec_k_for_lm(cfg, cut_layer, batch=max_batch,
+                                   channel=self.channel,
+                                   acceptance=spec_acceptance)[0].k
+        assert isinstance(spec_k, int) and spec_k >= 1, spec_k
+        self.spec_k = spec_k
 
         self.edge_blocks, self.cloud_blocks = TF.split_blocks(
             params, self.cfg, cut_layer)
@@ -590,29 +779,69 @@ class CollaborativeServingEngine(_SlotEngine):
                      "lm_head": params["lm_head"]}
         # edge weights are INT8-quantized at deployment (fake-quant lattice)
         self._edge_qctx = ML.QuantCtx(mode="dynamic", a_bits=a_bits)
+        # one shared page pool / block table for every split cache
+        self._pool: Optional[_PagedPool] = None
+        if edge_paged or cloud_paged:
+            self._pool = _PagedPool.build(max_batch, max_len, page_size,
+                                          num_pages)
+        n_pool = self._pool.allocator.num_pages if self._pool else None
         # split KV caches: edge prefix / cloud suffix block sub-ranges
-        self._edge_pool: Optional[_PagedPool] = None
         if edge_paged:
-            self._edge_pool = _PagedPool.build(max_batch, max_len,
-                                               page_size, edge_num_pages)
             self._edge_cache = TF.init_cache(
                 self.cfg, max_batch, max_len, layers=self.n_edge,
                 paged=True, quantized=edge_int8, page_size=page_size,
-                num_pages=self._edge_pool.allocator.num_pages)
+                num_pages=n_pool)
         else:
             self._edge_cache = TF.init_cache(self.cfg, max_batch, max_len,
                                              layers=self.n_edge,
                                              quantized=edge_int8)
-        self._cloud_cache = TF.init_cache(self.cfg, max_batch, max_len,
-                                          layers=self.n_cloud)
+        if cloud_paged:
+            self._cloud_cache = TF.init_cache(
+                self.cfg, max_batch, max_len, layers=self.n_cloud,
+                paged=True, quantized=cloud_int8, page_size=page_size,
+                num_pages=n_pool)
+        else:
+            self._cloud_cache = TF.init_cache(self.cfg, max_batch, max_len,
+                                              layers=self.n_cloud)
         self._edge = jax.jit(self._edge_impl)
         self._cloud = jax.jit(self._cloud_impl)
-        self._edge_prefill = jax.jit(self._edge_prefill_impl)
-        self._cloud_prefill = jax.jit(self._cloud_prefill_impl)
-        self._edge_decode = jax.jit(self._edge_decode_impl)
-        self._cloud_decode = jax.jit(self._cloud_decode_impl)
+        self._edge_prefill = _jit_phase(self._edge_prefill_impl, donate=(3,))
+        self._cloud_prefill = _jit_phase(self._cloud_prefill_impl,
+                                         donate=(4,))
+        self._edge_decode = _jit_phase(self._edge_decode_impl, donate=(3,))
+        self._cloud_decode = _jit_phase(self._cloud_decode_impl, donate=(4,))
+        if self.spec_k > 1:
+            # the edge's draft model: the cloud-suffix weights served
+            # through the same INT8 fake-quant lattice as the prefix
+            # (1 B/elem deployed — see edge_model_bytes), plus a draft KV
+            # cache in the edge's own layout over the shared block table
+            self.draft_blocks = self.cloud_blocks
+            if edge_paged:
+                self._draft_cache = TF.init_cache(
+                    self.cfg, max_batch, max_len, layers=self.n_cloud,
+                    paged=True, quantized=edge_int8, page_size=page_size,
+                    num_pages=n_pool)
+            else:
+                self._draft_cache = TF.init_cache(
+                    self.cfg, max_batch, max_len, layers=self.n_cloud,
+                    quantized=edge_int8)
+            self._draft_prefill = _jit_phase(self._draft_prefill_impl,
+                                             donate=(3,))
+            self._spec_draft = _jit_phase(self._spec_draft_impl,
+                                          donate=(5, 6))
+            self._verify = _jit_phase(self._verify_impl, donate=(6,))
 
     # -- wire accounting ----------------------------------------------------
+    def _charge(self, nbytes: int, *, phase: str, log: bool = True) -> None:
+        self.stats.transmitted_bytes += int(nbytes)
+        self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
+        if phase == "prefill":
+            self.stats.prefill_bytes += int(nbytes)
+        else:
+            self.stats.decode_bytes += int(nbytes)
+            if log:
+                self.stats.decode_bytes_log.append(int(nbytes))
+
     def _account(self, blob: jax.Array, *, phase: str,
                  rows: Optional[int] = None,
                  row_elems: Optional[np.ndarray] = None) -> None:
@@ -633,23 +862,24 @@ class CollaborativeServingEngine(_SlotEngine):
             n_rows = blob.shape[0] if rows is None else rows
             per_row = (blob.size // blob.shape[0]) * itemsize
             nbytes = n_rows * (per_row + _QP_BYTES)
-        self.stats.transmitted_bytes += int(nbytes)
-        self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
-        if phase == "prefill":
-            self.stats.prefill_bytes += int(nbytes)
-        else:
-            self.stats.decode_bytes += int(nbytes)
-            self.stats.decode_bytes_log.append(int(nbytes))
+        self._charge(nbytes + _MSG_BYTES, phase=phase)
 
-    def _account_downlink(self, n_rows: int) -> None:
-        """The cloud→edge return of the sampled tokens: the edge can't
-        embed the next token until it arrives, so every serial step pays
-        a second transfer (4 B token per live request + channel RTT).
-        Counted in ``transmitted_bytes``/``channel_latency_s`` but not in
-        the decode-delta uplink split."""
-        nbytes = 4 * n_rows
+    def _account_downlink(self, n_rows: int, *, k: int = 1,
+                          phase: str = "decode") -> None:
+        """The cloud→edge return: the sampled (or corrected) token per
+        live request, plus — when a round verified k > 1 drafts — the
+        accept mask (one bit per draft, byte-packed).  The edge can't
+        start the next round until it arrives, so every round pays this
+        second transfer and its channel RTT.  Counted in
+        ``transmitted_bytes``/``downlink_bytes``, never in the uplink
+        ``decode_bytes`` split."""
+        nbytes = n_rows * (_TOK_BYTES + (_cdiv(k, 8) if k > 1 else 0)) \
+            + _MSG_BYTES
         self.stats.transmitted_bytes += nbytes
         self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
+        self.stats.downlink_bytes += nbytes
+        if phase == "decode":
+            self.stats.decode_downlink_bytes += nbytes
 
     # -- incremental split-cache phases --------------------------------------
     def _edge_prefill_impl(self, blocks, embed, toks, cache, slots, bt_rows,
@@ -686,18 +916,54 @@ class CollaborativeServingEngine(_SlotEngine):
         return quantize(h, qp), qp, cache
 
     def _cloud_prefill_impl(self, blocks, tail, blob, qp, cache, slots,
-                            cur, pos, plens):
+                            bt_rows, cur, pos, plens):
         cfg = self.cfg
         h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
         n = h.shape[0]
-        small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud)
-        x, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                 cache=small, cache_index=jnp.int32(0))
-        cache = {k: cache[k].at[:, slots].set(small[k]) for k in cache}
+        if self.cloud_paged:
+            group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
+            x, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=group, cache_index=jnp.int32(0),
+                                     block_tables=bt_rows,
+                                     calibrate_kv=self.cloud_int8,
+                                     kv_lengths=plens)
+            cache = _paged_prefill_merge(cache, group, slots)
+        else:
+            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud)
+            x, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=small, cache_index=jnp.int32(0))
+            cache = {k: cache[k].at[:, slots].set(small[k]) for k in cache}
         logits = TF.lm_head(tail, x[jnp.arange(n), plens - 1][:, None])[:, 0]
         cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
         pos = pos.at[slots].set(plens)
         return cache, cur, pos
+
+    def _draft_prefill_impl(self, blocks, blob, qp, cache, slots, bt_rows,
+                            plens):
+        """Fill the edge's local draft cache: the INT8 suffix copy runs
+        the same dequantized boundary blob the cloud saw, so the draft
+        model starts every round from the committed prefix state."""
+        cfg = self.cfg
+        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2), locally
+        n = h.shape[0]
+        if self.edge_paged:
+            group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
+            _, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=group, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx,
+                                     block_tables=bt_rows,
+                                     calibrate_kv=self.edge_int8,
+                                     kv_lengths=plens)
+            cache = _paged_prefill_merge(cache, group, slots)
+        else:
+            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud,
+                                  quantized=self.edge_int8)
+            _, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=small, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx)
+            cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
+                                   for k in ("k", "v")})
+        return cache
 
     def _edge_decode_impl(self, blocks, embed, cur, cache, pos, bt):
         self.trace_counts["decode"] += 1
@@ -711,21 +977,94 @@ class CollaborativeServingEngine(_SlotEngine):
         qp = compute_qparams(h, axis=0, bits=self.a_bits)
         return quantize(h, qp), qp, cache                  # [B, 1, D] delta
 
-    def _cloud_decode_impl(self, blocks, tail, blob, qp, cache, pos):
+    def _cloud_decode_impl(self, blocks, tail, blob, qp, cache, pos, bt):
         cfg = self.cfg
         h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
         x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                 cache=cache, cache_index=pos)
+                                 cache=cache, cache_index=pos,
+                                 block_tables=bt)
         logits = TF.lm_head(tail, x)[:, 0]
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
 
+    # -- speculative draft/verify round --------------------------------------
+    def _spec_draft_impl(self, edge_blocks, draft_blocks, embed, tail, cur,
+                         e_cache, d_cache, pos, bt):
+        """k sequential local steps on the edge: INT8 prefix → Eq.(1)
+        delta → local INT8 suffix copy → greedy draft token.  One jit'd
+        ``lax.scan``, so a whole round costs one dispatch.  Emits the
+        stacked ``[k, B, D]`` boundary blob with per-(row, position)
+        quant params — bitwise the frames k serial steps would have
+        shipped — and the k draft tokens."""
+        self.trace_counts["spec_draft"] += 1
+        cfg = self.cfg
+        rope = self._rope()
+
+        def step(carry, _):
+            tok, p, ec, dc = carry
+            x = ML.embed(embed, tok[:, None]).astype(cfg.dtype)
+            h, ec = TF.run_blocks(edge_blocks, x, cfg, rope=rope, cache=ec,
+                                  cache_index=p, qctx=self._edge_qctx,
+                                  block_tables=bt)
+            qp = compute_qparams(h, axis=0, bits=self.a_bits)   # per row
+            blob = quantize(h, qp)
+            hq = dequantize(blob, qp).astype(cfg.dtype)  # what the cloud sees
+            y, dc = TF.run_blocks(draft_blocks, hq, cfg, rope=rope, cache=dc,
+                                  cache_index=p, qctx=self._edge_qctx,
+                                  block_tables=bt)
+            logits = TF.lm_head(tail, y)[:, 0]
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            p = jnp.minimum(p + 1, self.max_len - 1)
+            return (nxt, p, ec, dc), (blob[:, 0], qp.scale, qp.zero_point,
+                                      nxt)
+
+        (_, _, e_cache, d_cache), (blobs, scales, zps, drafts) = \
+            jax.lax.scan(step, (cur, pos, e_cache, d_cache), None,
+                         length=self.spec_k)
+        return blobs, scales, zps, drafts, e_cache, d_cache
+
+    def _verify_impl(self, blocks, tail, blobs, scales, zps, drafts, cache,
+                     pos, bt):
+        """One batched multi-token cloud step over all k drafted
+        positions, with longest-prefix acceptance: position i's greedy
+        token ``t_i`` is compared against draft ``d_i``; the round
+        commits ``t_1..t_{j+1}`` where j is the number of leading
+        matches — the token at the first divergence is the *corrected*
+        token, so every round commits at least one exact greedy token.
+        Rejected cache positions are rolled back by the returned
+        per-slot position (a length decrement; stale page entries stay
+        masked by causality until overwritten)."""
+        self.trace_counts["verify"] += 1
+        cfg = self.cfg
+        k = self.spec_k
+        # Eq.(2) per (row, position): same lattice the serial path ships
+        h = (blobs.astype(jnp.float32) - zps[..., None]) * scales[..., None]
+        h = h.transpose(1, 0, 2).astype(cfg.dtype)              # [B, k, D]
+        x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                 cache=cache, cache_index=pos,
+                                 block_tables=bt)
+        logits = TF.lm_head(tail, x)                            # [B, k, V]
+        t = jnp.argmax(logits, -1).astype(jnp.int32)            # [B, k]
+        d = drafts.T                                            # [B, k]
+        ok = (d[:, :k - 1] == t[:, :k - 1]).astype(jnp.int32)
+        n_commit = 1 + jnp.sum(jnp.cumprod(ok, axis=1), axis=1)  # [B]
+        new_cur = jnp.take_along_axis(t, (n_commit - 1)[:, None],
+                                      axis=1)[:, 0]
+        new_pos = jnp.minimum(pos + n_commit, self.max_len - 1)
+        return t, n_commit, new_cur, cache, new_pos
+
     # -- scheduler hooks ----------------------------------------------------
+    def _round_headroom(self) -> int:
+        return self.spec_k - 1
+
     def _admit(self, toks, plens, max_news, slots, cur, pos):
         bt_rows = None
-        if self.edge_paged:
-            bt_rows = self._edge_pool.admit(slots, plens, max_news,
-                                            toks.shape[1])
+        if self._pool is not None:
+            # reserve the speculative overshoot so a round's rejected-tail
+            # writes can never spill into another request's pages
+            bt_rows = self._pool.admit(slots, plens,
+                                       max_news + self._round_headroom(),
+                                       toks.shape[1])
         slots_j = jnp.asarray(slots)
         plens_j = jnp.asarray(plens)
         blob, qp, self._edge_cache = self._edge_prefill(
@@ -735,34 +1074,69 @@ class CollaborativeServingEngine(_SlotEngine):
                       row_elems=plens.astype(np.int64) * self.cfg.d_model)
         self._cloud_cache, cur, pos = self._cloud_prefill(
             self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
-            slots_j, cur, pos, plens_j)
-        self._account_downlink(toks.shape[0])
+            slots_j, bt_rows, cur, pos, plens_j)
+        if self.spec_k > 1:
+            self._draft_cache = self._draft_prefill(
+                self.draft_blocks, blob, qp, self._draft_cache, slots_j,
+                bt_rows, plens_j)
+        self._account_downlink(toks.shape[0], phase="prefill")
         return cur, pos
 
     def _decode_all(self, cur, pos, n_active):
-        bt = self._edge_pool.table_dev() if self.edge_paged else None
+        bt = self._pool.table_dev() if self._pool is not None else None
         blob, qp, self._edge_cache = self._edge_decode(
             self.edge_blocks, self.embed, cur, self._edge_cache, pos, bt)
         self._account(blob, phase="decode", rows=n_active)
         cur, self._cloud_cache, pos = self._cloud_decode(
-            self.cloud_blocks, self.tail, blob, qp, self._cloud_cache, pos)
+            self.cloud_blocks, self.tail, blob, qp, self._cloud_cache, pos,
+            bt)
         self._account_downlink(n_active)
         return cur, pos
 
+    def _round(self, cur, pos, slots):
+        if self.spec_k == 1:
+            return super()._round(cur, pos, slots)
+        k, n_active = self.spec_k, len(slots)
+        bt = self._pool.table_dev() if self._pool is not None else None
+        blobs, scales, zps, drafts, self._edge_cache, self._draft_cache = \
+            self._spec_draft(self.edge_blocks, self.draft_blocks, self.embed,
+                             self.tail, cur, self._edge_cache,
+                             self._draft_cache, pos, bt)
+        # one uplink message: k per-row-framed [1, D] deltas + the k-1
+        # graded drafts, amortizing the header (and the RTT) over a round
+        self._charge(n_active * (k * (self.cfg.d_model * blobs.dtype.itemsize
+                                      + _QP_BYTES)
+                                 + (k - 1) * _TOK_BYTES) + _MSG_BYTES,
+                     phase="decode")
+        toks, n_commit, cur, self._cloud_cache, pos = self._verify(
+            self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
+            self._cloud_cache, pos, bt)
+        # the edge needs the accept counts to schedule the next round, so
+        # this sync is part of the protocol, not a host-loop artifact
+        counts = np.asarray(n_commit)
+        self._account_downlink(n_active, k=k)
+        self.stats.spec_rounds += 1
+        self.stats.drafted_tokens += (k - 1) * n_active
+        self.stats.draft_hits += int(np.minimum(counts[slots] - 1,
+                                                k - 1).sum())
+        return cur, pos, toks, counts
+
     def _retire(self, slot):
-        if self.edge_paged:
-            self._edge_pool.retire(slot)
+        if self._pool is not None:
+            self._pool.retire(slot)
 
     def _can_admit(self, group_shapes, plen, max_new, bucket):
-        if not self.edge_paged:
+        if self._pool is None:
             return True
-        return self._edge_pool.can_admit(group_shapes + [(plen, max_new)],
-                                         bucket)
+        head = self._round_headroom()
+        shapes = [(p, m + head) for p, m in group_shapes]
+        return self._pool.can_admit(shapes + [(plen, max_new + head)],
+                                    bucket)
 
     def edge_cache_bytes(self, *, live_only: bool = False) -> int:
         """Edge KV footprint; ``live_only`` counts allocated pages only."""
         if self.edge_paged and live_only:
-            return self._edge_pool.live_cache_bytes(self._edge_cache)
+            return self._pool.live_cache_bytes(self._edge_cache)
         return sum(v.size * v.dtype.itemsize
                    for v in self._edge_cache.values())
 
@@ -790,7 +1164,7 @@ class CollaborativeServingEngine(_SlotEngine):
         # Eq.(1): quantize boundary blob for the wire
         qp = compute_qparams(h, bits=self.a_bits)
         blob = quantize(h, qp)
-        nbytes = blob.size * blob.dtype.itemsize + _QP_BYTES
+        nbytes = blob.size * blob.dtype.itemsize + _QP_BYTES + _MSG_BYTES
         self.stats.transmitted_bytes += int(nbytes)
         self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
         h = dequantize(blob, qp).astype(self.cfg.dtype)       # Eq.(2)

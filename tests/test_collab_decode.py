@@ -73,7 +73,8 @@ def test_incremental_decode_matches_recompute(params, cut):
     prompts = _prompts(3)
     inc = CollaborativeServingEngine(params, CFG, cut_layer=cut,
                                      max_batch=3, max_len=32, a_bits=16,
-                                     edge_paged=False, edge_int8=False)
+                                     edge_paged=False, edge_int8=False,
+                                     cloud_paged=False, cloud_int8=False)
     got = inc.generate(prompts, max_new_tokens=8)
     rec = CollaborativeServingEngine(params, CFG, cut_layer=cut,
                                      max_batch=3, max_len=32, a_bits=16)
@@ -100,19 +101,23 @@ def test_incremental_int8_tracks_recompute(params):
 @pytest.mark.parametrize("plen", [6, 12])
 def test_decode_bytes_per_token_are_O1(params, plen):
     """Every decode step ships the same per-request [1, D] delta (plus
-    its Eq.(1) scale/zero-point) — transmitted bytes per generated token
-    do not grow with sequence length, while the one-time prefill blob is
-    O(S)."""
+    its Eq.(1) scale/zero-point and one message header) — transmitted
+    bytes per generated token do not grow with sequence length, while
+    the one-time prefill blob is O(S)."""
+    from repro.serve.engine import _MSG_BYTES
+
     b = 3
     eng = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=b,
                                      max_len=32,
                                      channel=Channel.from_kbps(100))
     eng.generate(_prompts(b, plen=plen), max_new_tokens=8)
-    per_step = b * (CFG.d_model + 8)
+    per_step = b * (CFG.d_model + 8) + _MSG_BYTES
     # 8 tokens = 1 from prefill + 7 decode steps, each the same delta
     assert eng.stats.decode_bytes_log == [per_step] * 7
-    assert eng.stats.prefill_bytes == b * (plen * CFG.d_model + 8)
-    assert eng.stats.bytes_per_decode_token() == CFG.d_model + 8
+    assert eng.stats.prefill_bytes == b * (plen * CFG.d_model + 8) \
+        + _MSG_BYTES
+    assert eng.stats.bytes_per_decode_token() == \
+        pytest.approx(per_step / b)
     # and the recompute path really is O(S) per token, for contrast
     rec = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=b,
                                      max_len=32)
@@ -142,7 +147,8 @@ def test_collab_continuous_batching_frees_slots(params):
     prompts = _prompts(5, seed=6)
     eng = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=2,
                                      max_len=32, a_bits=16,
-                                     edge_paged=False, edge_int8=False)
+                                     edge_paged=False, edge_int8=False,
+                                     cloud_paged=False, cloud_int8=False)
     outs = eng.generate(prompts, max_new_tokens=3)
     rec = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=5,
                                      max_len=32, a_bits=16)
@@ -150,10 +156,12 @@ def test_collab_continuous_batching_frees_slots(params):
     assert len(outs) == 5 and all(len(o) == 3 for o in outs)
     assert eng.stats.prefill_calls == 3          # 2 + 2 + 1 admissions
     assert outs == ref
-    # idle slots are never charged to the wire: per-token bytes stay the
-    # per-request delta (int16 lattice at a_bits=16) even when the last
-    # request decodes alone
-    assert eng.stats.bytes_per_decode_token() == 2 * CFG.d_model + 8
+    # idle slots are never charged to the wire: the last request decodes
+    # alone, and its rounds' uplinks carry exactly one per-request delta
+    # (int16 lattice at a_bits=16) + the message header
+    from repro.serve.engine import _MSG_BYTES
+    assert eng.stats.decode_bytes_log[-1] == (2 * CFG.d_model + 8) \
+        + _MSG_BYTES
 
 
 def test_timed_mode_populates_phase_latency(params):

@@ -167,7 +167,8 @@ def test_collab_default_quantized_edge_tracks_fp_edge(params):
     prompts = _prompts(3, plen=6, seed=2)
     fp = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=3,
                                     max_len=32, edge_paged=False,
-                                    edge_int8=False)
+                                    edge_int8=False, cloud_paged=False,
+                                    cloud_int8=False)
     q8 = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=3,
                                     max_len=32)
     assert q8.edge_paged and q8.edge_int8          # the default layout
@@ -282,8 +283,8 @@ def test_paged_block_tables_stay_in_bounds(params):
                                      max_len=32, page_size=8)
     eng.generate(_prompts(4, plen=9, seed=8), max_new_tokens=4)
     n_pages = eng._edge_cache["k_pages"].shape[1]
-    assert int(eng._edge_pool.bt.max()) < n_pages
-    assert int(eng._edge_pool.bt.min()) >= 0
+    assert int(eng._pool.bt.max()) < n_pages
+    assert int(eng._pool.bt.min()) >= 0
 
 
 # ---------------------------------------------------------------------------

@@ -67,11 +67,13 @@ def test_collaborative_engine_close_to_cloud_only(params):
 
 
 def test_collaborative_transmits_int8_blob_size(params):
+    from repro.serve.engine import _MSG_BYTES
+
     collab = CollaborativeServingEngine(params, CFG, cut_layer=0)
     toks = np.stack(_prompts(2, plen=8, seed=3))
     collab.forward(toks)
-    # boundary blob: [2, 8, 32] int8 + 8B scale/zp
-    assert collab.stats.transmitted_bytes == 2 * 8 * 32 + 8
+    # boundary blob: [2, 8, 32] int8 + 8B scale/zp + one message header
+    assert collab.stats.transmitted_bytes == 2 * 8 * 32 + 8 + _MSG_BYTES
 
 
 def test_collaborative_logits_close_to_monolithic(params):
