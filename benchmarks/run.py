@@ -7,20 +7,78 @@ Prints human tables per benchmark, then a machine-readable
 
 ``--quick`` is the CI smoke mode: every section's callable is still
 resolved (so a renamed/broken benchmark registration fails loudly on
-CPU), but only the cheap analytic sections and a shrunken speculative-
-decode run actually execute.
+CPU), but only the cheap analytic sections and shrunken speculative-
+decode / adaptive-serve runs actually execute.  Quick mode then runs
+the **benchmark-drift guard**: fresh quick-mode numbers are compared
+against the committed ``BENCH_*.json`` headline metrics, and the
+process exits non-zero on a >2x regression of any tracked metric —
+CI catches a perf cliff, not just a crash.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
+
+# tracked headline metrics: BENCH file -> dotted paths into its JSON,
+# all "higher is better" ratios (scale-free, so quick-mode runs remain
+# comparable with the committed full-mode numbers within the 2x band;
+# the k=2 spec column is tracked because its quick/full gap is the
+# smallest — the larger-k wins grow with tokens per run)
+DRIFT_TRACKED = {
+    "BENCH_spec_decode.json": ["speculative.2.e2e_speedup_vs_k1"],
+    "BENCH_adaptive_serve.json": ["adaptive_vs_worst_fixed_e2e_speedup"],
+}
+DRIFT_RATIO = 2.0
+
+
+def _lookup(d, dotted: str):
+    for part in dotted.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d if isinstance(d, (int, float)) else None
+
+
+def check_drift(committed: dict, fresh: dict,
+                ratio: float = DRIFT_RATIO) -> list:
+    """Compare tracked headline metrics; returns human-readable failure
+    strings for every metric that regressed by more than ``ratio``.
+    Files/metrics absent from the *committed* side are skipped (nothing
+    baselined yet), but a metric that is baselined and then disappears
+    from the fresh run is itself a failure — a renamed key must not
+    silently disarm the guard."""
+    failures = []
+    for fname, metrics in DRIFT_TRACKED.items():
+        if fname not in committed or fname not in fresh:
+            continue
+        for m in metrics:
+            old = _lookup(committed[fname], m)
+            new = _lookup(fresh[fname], m)
+            if old is None:
+                continue
+            if new is None:
+                failures.append(
+                    f"{fname}:{m} missing from fresh run (metric "
+                    f"renamed/dropped? update DRIFT_TRACKED)")
+            elif new < old / ratio:
+                failures.append(
+                    f"{fname}:{m} regressed >{ratio}x: "
+                    f"committed {old:.3f} -> fresh {new:.3f}")
+    return failures
 
 
 def main(quick: bool = False) -> None:
-    from benchmarks import (collab_decode, fig3_breakdown, kernel_bench,
-                            optimized_decode, paged_decode, roofline,
-                            spec_decode, table3_partition,
+    from benchmarks import (adaptive_serve, collab_decode, fig3_breakdown,
+                            kernel_bench, optimized_decode, paged_decode,
+                            roofline, spec_decode, table3_partition,
                             table12_transmission)
+
+    # snapshot the committed headline numbers before any section
+    # rewrites its BENCH file
+    committed = {f: json.loads(Path(f).read_text())
+                 for f in DRIFT_TRACKED if Path(f).exists()}
 
     csv_rows = []
 
@@ -81,10 +139,33 @@ def main(quick: bool = False) -> None:
                 for k, v in r["speculative"].items())
             + f";autotuned_k={r['autotuned_k']}")
 
+    section("adaptive_serve", lambda: adaptive_serve.run(quick=quick),
+            lambda r: f"vs_worst_fixed="
+                      f"{r['adaptive_vs_worst_fixed_e2e_speedup']:.2f}x;"
+                      f"fp_bit_identical={r['fp_bit_identical']}")
+
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.0f},{derived}")
+
+    if quick:
+        fresh = {f: json.loads(Path(f).read_text())
+                 for f in DRIFT_TRACKED if Path(f).exists()}
+        failures = check_drift(committed, fresh)
+        print("\n=== benchmark drift guard " + "=" * 42)
+        if failures:
+            for f in failures:
+                print("FAIL", f)
+            raise SystemExit(1)
+        compared = sum(
+            1 for f, ms in DRIFT_TRACKED.items()
+            if f in committed and f in fresh
+            for m in ms
+            if _lookup(committed[f], m) is not None
+            and _lookup(fresh[f], m) is not None)
+        print(f"ok: {compared} tracked metrics within {DRIFT_RATIO}x "
+              f"of committed")
 
 
 if __name__ == "__main__":

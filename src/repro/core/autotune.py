@@ -26,7 +26,8 @@ import dataclasses
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel, DeviceModel,
-                                  EDGE_TX2_CLASS, PhaseBreakdown, Profile,
+                                  EDGE_TX2_CLASS, MSG_BYTES, PhaseBreakdown,
+                                  Profile, QP_BYTES, TOK_BYTES,
                                   expected_accepted_tokens, layer_time,
                                   speculative_round_time, subgraph_time)
 from repro.core.graph import LayerGraph
@@ -34,7 +35,8 @@ from repro.core.partition import (CandidatePoint, candidate_partition_points,
                                   merge_non_parametric)
 
 __all__ = ["PartitionPerf", "AutoTuner", "auto_tune", "SpecKPerf",
-           "tune_spec_k", "spec_k_for_lm"]
+           "tune_spec_k", "spec_k_for_lm", "lm_round_args", "CutKPerf",
+           "tune_cut_and_k"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,7 +174,7 @@ def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
             blob_bytes=blob_bytes, edge=edge, cloud=cloud, channel=channel,
             draft_flops=draft_flops, acceptance=acceptance,
             return_bytes=return_bytes, rows=rows)
-        uplink = k * blob_bytes + (k - 1) * 4.0 * rows
+        uplink = k * blob_bytes + (k - 1) * TOK_BYTES * rows + MSG_BYTES
         perfs.append(SpecKPerf(
             k=k, breakdown=bd,
             uplink_bytes_per_token=uplink
@@ -181,23 +183,82 @@ def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
     return best, perfs
 
 
+def lm_round_args(cfg, cut_layer: int, *, batch: int) -> dict:
+    """Per-step flop/byte arguments of ``tune_spec_k`` /
+    ``speculative_round_time`` for an ``LMConfig`` split at
+    ``cut_layer``: INT8 edge prefix of ``cut_layer + 1`` blocks, FP32
+    cloud suffix + head, Eq.(1)-framed ``[B, 1, D]`` boundary delta.
+    The edge's draft model is the INT8 suffix copy, so ``draft_flops``
+    equals the cloud suffix's per-step flops (run at INT8 throughput).
+
+    This is the model half the online policy (``serve.policy``)
+    re-evaluates against live telemetry — one dict per candidate cut,
+    shared by the offline and online tuners."""
+    blk = cfg.block_param_count()
+    head = cfg.vocab * cfg.d_model + cfg.d_model
+    suffix = 2 * (blk * (cfg.n_layers - cut_layer - 1) + head) * batch
+    return dict(
+        edge_flops=2 * blk * (cut_layer + 1) * batch,
+        cloud_flops=suffix, draft_flops=suffix,
+        blob_bytes=batch * (cfg.d_model + QP_BYTES),
+        return_bytes=TOK_BYTES * batch, rows=batch)
+
+
 def spec_k_for_lm(cfg, cut_layer: int, *, batch: int, channel: Channel,
                   acceptance: float = 0.8,
                   edge: DeviceModel = EDGE_TX2_CLASS,
                   cloud: DeviceModel = CLOUD_TITANXP_CLASS,
                   ks: Sequence[int] = (1, 2, 4, 8, 16),
                   ) -> Tuple[SpecKPerf, List[SpecKPerf]]:
-    """``tune_spec_k`` with the per-step flops/bytes derived from an
-    ``LMConfig`` split at ``cut_layer`` — what
-    ``CollaborativeServingEngine(spec_k="auto")`` calls.  The edge's
-    draft model is the INT8 suffix copy, so ``draft_flops`` equals the
-    cloud suffix's per-step flops (run at INT8 throughput)."""
-    blk = cfg.block_param_count()
-    head = cfg.vocab * cfg.d_model + cfg.d_model
-    suffix = 2 * (blk * (cfg.n_layers - cut_layer - 1) + head) * batch
-    return tune_spec_k(
-        edge_flops=2 * blk * (cut_layer + 1) * batch,
-        cloud_flops=suffix, draft_flops=suffix,
-        blob_bytes=batch * (cfg.d_model + 8),
-        edge=edge, cloud=cloud, channel=channel, acceptance=acceptance,
-        ks=ks, return_bytes=4.0 * batch, rows=batch)
+    """``tune_spec_k`` with the per-step flops/bytes of ``lm_round_args``
+    — what ``CollaborativeServingEngine(spec_k="auto")`` calls."""
+    return tune_spec_k(edge=edge, cloud=cloud, channel=channel,
+                       acceptance=acceptance, ks=ks,
+                       **lm_round_args(cfg, cut_layer, batch=batch))
+
+
+# ---------------------------------------------------------------------------
+# Joint (cut, k) tuning — Algorithm 1's loop over the full online grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CutKPerf:
+    """One cell of the joint (cut_layer, spec_k) grid."""
+    cut: int
+    k: int
+    breakdown: PhaseBreakdown
+
+    @property
+    def s_per_token(self) -> float:
+        return self.breakdown.per_token_s
+
+
+def tune_cut_and_k(cfg, *, batch: int, channel: Channel,
+                   cuts: Sequence[int], acceptance: float = 0.8,
+                   edge: DeviceModel = EDGE_TX2_CLASS,
+                   cloud: DeviceModel = CLOUD_TITANXP_CLASS,
+                   ks: Sequence[int] = (1, 2, 4, 8, 16),
+                   ) -> Tuple[CutKPerf, List[CutKPerf]]:
+    """Algorithm 1's predict-then-pick loop over the joint grid of
+    candidate partition points × speculative draft lengths, minimizing
+    predicted time per *accepted* token — the decision the online
+    control plane (``serve.policy``) re-evaluates as telemetry moves.
+
+    The k=1 column degrades to the serial incremental step (there the
+    smallest edge prefix tends to win: the slow INT8 edge runs only
+    ``cut + 1`` blocks); the k>1 columns amortize the RTT and the
+    per-message framing k-fold, and there the cut trades edge prefix
+    steps against cloud verify flops.  All candidate cuts share one
+    prequantized weight bank at serving time, so acting on a new best
+    cut is a pointer swap (``serve.engine._CutBank``)."""
+    perfs = []
+    for cut in cuts:
+        args = lm_round_args(cfg, cut, batch=batch)
+        for k in ks:
+            bd = speculative_round_time(
+                k=k, edge=edge, cloud=cloud, channel=channel,
+                acceptance=acceptance, **args)
+            perfs.append(CutKPerf(cut=cut, k=k, breakdown=bd))
+    best = min(perfs, key=lambda p: p.s_per_token)
+    return best, perfs

@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.costmodel import Channel
+from repro.core.costmodel import Channel, QP_BYTES
 from repro.core.graph import LayerGraph
 from repro.core.partition import candidate_partition_points
 from repro.core.quant import (QuantParams, compute_qparams, dequantize,
@@ -171,7 +171,9 @@ class CollaborativeEngine:
             # Eq.(1): quantize the boundary blob for transmission
             qp = compute_qparams(h, bits=self.a_bits)
             blob = quantize(h, qp)
-            blob_bytes = blob.size * blob.dtype.itemsize + 8
+            # payload + the Eq.(1) scale/zero-point frame (the canonical
+            # constant the serving engines and costmodel charge)
+            blob_bytes = blob.size * blob.dtype.itemsize + int(QP_BYTES)
             precision = "int8"
             # Eq.(2): cloud dequantizes
             h = dequantize(blob, qp)

@@ -20,9 +20,23 @@ from repro.core.graph import LayerGraph, Node
 
 __all__ = ["DeviceModel", "Channel", "Profile", "PhaseBreakdown",
            "EDGE_TX2_CLASS", "CLOUD_TITANXP_CLASS", "CLOUD_TPU_V5E_CHIP",
+           "MSG_BYTES", "QP_BYTES", "TOK_BYTES",
            "layer_time", "subgraph_time", "tpu_v5e_pod",
            "collab_decode_step_time", "speculative_round_time",
            "expected_accepted_tokens"]
+
+# Canonical wire-framing constants, shared with the serving engines'
+# accounting (``serve.transport``) so model predictions and measured
+# byte counters can never drift apart:
+#   MSG_BYTES — per-*message* protocol framing (TCP/IP-class headers +
+#               slot ids/round counter); every channel traversal pays it
+#               once, which is exactly what a draft/verify round
+#               amortizes k-fold alongside the RTT.
+#   QP_BYTES  — per-blob Eq.(1) framing: f32 scale + f32 zero-point.
+#   TOK_BYTES — one token id (cloud→edge return / edge→cloud draft).
+MSG_BYTES = 64.0
+QP_BYTES = 8.0
+TOK_BYTES = 4.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,7 +127,8 @@ class PhaseBreakdown:
 def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
                             blob_bytes: float, edge: DeviceModel,
                             cloud: DeviceModel, channel: Channel,
-                            return_bytes: float = 4.0) -> PhaseBreakdown:
+                            return_bytes: float = 4.0,
+                            msg_bytes: float = MSG_BYTES) -> PhaseBreakdown:
     """Predicted per-token cost of *incremental* collaborative decode.
 
     With split KV caches, each generated token runs only the new-token
@@ -122,12 +137,14 @@ def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
     is O(1) in sequence length, which is what makes transmission stop
     dominating (JointDNN's observation applied per token).  Each step is
     a full round trip: the uplink delta plus the cloud→edge return of
-    the sampled tokens (``return_bytes``), each paying the channel RTT."""
+    the sampled tokens (``return_bytes``), each a *message* paying the
+    ``msg_bytes`` protocol framing the engines charge (``ServeStats``)
+    on top of its payload, and each paying the channel RTT."""
     edge_s = edge_flops / edge.peak_ops_int8 + edge.launch_overhead_s
     cloud_s = (cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
                + cloud.launch_overhead_s)
-    channel_s = (channel.transfer_time(blob_bytes)
-                 + channel.transfer_time(return_bytes))
+    channel_s = (channel.transfer_time(blob_bytes + msg_bytes)
+                 + channel.transfer_time(return_bytes + msg_bytes))
     return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s)
 
 
@@ -147,7 +164,8 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
                            draft_flops: float = 0.0,
                            acceptance: float = 1.0,
                            return_bytes: float = 4.0,
-                           rows: int = 1) -> PhaseBreakdown:
+                           rows: int = 1,
+                           msg_bytes: float = MSG_BYTES) -> PhaseBreakdown:
     """Predicted cost of one speculative *draft/verify round* of length
     ``k`` (the flop/byte arguments are per-step quantities, exactly
     ``collab_decode_step_time``'s).
@@ -158,11 +176,12 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
     flops, one launch); the channel carries one uplink (k boundary
     deltas + the k-1 graded draft-token ids, 4 B each across ``rows``
     live requests) and one downlink (the sampled/corrected token plus,
-    for k > 1, a byte-packed accept mask) — so the RTT is paid once per
-    round instead of once per token.  ``tokens`` in the returned
-    breakdown is the expected accepted-token count at the given
-    per-position draft ``acceptance``, making ``per_token_s`` the
-    quantity ``autotune.tune_spec_k`` minimizes.
+    for k > 1, a byte-packed accept mask) — so the RTT *and the
+    per-message ``msg_bytes`` framing* are paid once per round instead
+    of once per token.  ``tokens`` in the returned breakdown is the
+    expected accepted-token count at the given per-position draft
+    ``acceptance``, making ``per_token_s`` the quantity
+    ``autotune.tune_spec_k`` minimizes.
 
     ``k=1`` recovers ``collab_decode_step_time`` exactly: no draft
     model, no mask, one delta, one token — the auto-tuner can always
@@ -172,8 +191,9 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
     edge_s = k * edge_step + (k * draft_step if k > 1 else 0.0)
     cloud_s = (k * cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
                + cloud.launch_overhead_s)
-    uplink = k * blob_bytes + (k - 1) * 4.0 * rows
-    downlink = return_bytes + (float(-(-k // 8)) * rows if k > 1 else 0.0)
+    uplink = k * blob_bytes + (k - 1) * TOK_BYTES * rows + msg_bytes
+    downlink = return_bytes + msg_bytes \
+        + (float(-(-k // 8)) * rows if k > 1 else 0.0)
     channel_s = (channel.transfer_time(uplink)
                  + channel.transfer_time(downlink))
     return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s,

@@ -1,12 +1,16 @@
 """Serving launcher.
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --smoke \
-        --requests 8 --collaborative --cut auto --bandwidth 250
+        --requests 8 --collaborative --cut auto --bandwidth 250 \
+        --spec-k auto --adaptive
 
 Cloud-only mode runs the batched KV-cache engine; ``--collaborative``
 splits the stack at the (auto-tuned or given) block and runs the paper's
 INT8-edge / FP32-cloud mixed-precision pipeline over a simulated
-wireless channel.
+wireless channel.  ``--spec-k`` turns decode into draft/verify rounds
+(``auto`` self-corrects from measured acceptance between requests);
+``--adaptive`` closes the whole tuning loop online — link telemetry
+re-tunes both the draft length and the cut layer while serving.
 """
 from __future__ import annotations
 
@@ -35,6 +39,16 @@ def main(argv=None):
     ap.add_argument("--cut", default="auto")
     ap.add_argument("--bandwidth", type=float, default=250.0,
                     help="wireless KB/s for the collaborative channel")
+    ap.add_argument("--rtt", type=float, default=20.0,
+                    help="wireless round-trip time in ms")
+    ap.add_argument("--spec-k", default="1",
+                    help="speculative draft length: an int, or 'auto' to "
+                         "tune from the channel and keep self-correcting "
+                         "from measured acceptance")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online control loop: telemetry re-tunes spec_k "
+                         "between rounds and the cut layer at admission "
+                         "boundaries")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -46,7 +60,8 @@ def main(argv=None):
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab, args.prompt_len).astype(np.int32)
                for _ in range(args.requests)]
-    max_len = args.prompt_len + args.max_new + 8
+    spec_k = args.spec_k if args.spec_k == "auto" else int(args.spec_k)
+    max_len = args.prompt_len + args.max_new + 24
 
     if not args.collaborative:
         eng = ServingEngine(params, cfg, max_batch=4, max_len=max_len)
@@ -58,7 +73,7 @@ def main(argv=None):
         print("first output:", outs[0])
         return
 
-    channel = Channel.from_kbps(args.bandwidth, rtt_ms=20)
+    channel = Channel.from_kbps(args.bandwidth, rtt_ms=args.rtt)
     if args.cut == "auto":
         graph = make_graph(cfg, batch=1, seq=args.prompt_len)
         tuner = AutoTuner(graph, EDGE_TX2_CLASS, CLOUD_TITANXP_CLASS)
@@ -69,8 +84,13 @@ def main(argv=None):
               f"-> edge blocks 0..{cut_layer}")
     else:
         cut_layer = int(args.cut)
-    eng = CollaborativeServingEngine(params, cfg, cut_layer=cut_layer,
-                                     channel=channel, max_len=max_len)
+    if args.adaptive and cut_layer > cfg.n_layers - 2:
+        cut_layer = cfg.n_layers - 2
+        print(f"adaptive mode: clamping cut to {cut_layer} so every "
+              f"candidate partition keeps a cloud block")
+    eng = CollaborativeServingEngine(
+        params, cfg, cut_layer=cut_layer, channel=channel, max_len=max_len,
+        spec_k=spec_k, policy="auto" if args.adaptive else None)
     t0 = time.perf_counter()
     outs = eng.generate(prompts, max_new_tokens=args.max_new)
     dt = time.perf_counter() - t0
@@ -80,6 +100,11 @@ def main(argv=None):
           f"{eng.stats.bytes_per_decode_token():.0f} B/token incremental "
           f"decode), simulated channel "
           f"time {eng.stats.channel_latency_s:.2f}s")
+    if eng.spec_k > 1 or eng.policy is not None:
+        print(f"control loop: spec_k={eng.spec_k} cut={eng.cut} "
+              f"(switches: k={eng.stats.spec_k_switches}, "
+              f"cut={eng.stats.cut_switches}; draft acceptance "
+              f"{eng.stats.acceptance_rate():.0%})")
     print("first output:", outs[0])
 
 

@@ -43,8 +43,14 @@ class QuantCtx:
     per_channel: bool = True
     scales: Optional[Dict[str, QuantParams]] = None     # static mode
     recorder: Optional[Dict[str, MinMaxCalibrator]] = None  # calib mode
+    # weights already sit on the deployment lattice (prequantized once,
+    # e.g. serve.policy._CutBank), so per-call re-quantization would be
+    # redundant compute — only activations stay dynamic
+    quantize_weights: bool = True
 
     def weight(self, name: str, w: jax.Array) -> jax.Array:
+        if not self.quantize_weights:
+            return w
         axis = (w.ndim - 1) if self.per_channel else None
         qp = compute_qparams(w, axis=axis, bits=self.w_bits)
         return fake_quant(w, qp)

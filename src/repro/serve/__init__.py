@@ -1,0 +1,21 @@
+"""Serving subsystem: continuous-batching engines for the paper's
+cloud-edge collaborative deployment, as a package of focused layers.
+
+    scheduler   slot/bucket/round continuous batching (``_SlotEngine``)
+    kvcache     paged INT8 KV bookkeeping (``PageAllocator``)
+    transport   channel framing + wire accounting + link telemetry
+    policy      online (cut_layer, spec_k) re-tuning control plane
+    engine      ``ServingEngine`` / ``CollaborativeServingEngine``
+
+``repro.serve.engine`` re-exports the whole public surface, so both
+``from repro.serve import X`` and the historical
+``from repro.serve.engine import X`` work.
+"""
+from repro.serve.engine import (AdaptivePolicy, CollaborativeServingEngine,
+                                Decision, DriftingChannel, LinkTelemetry,
+                                PageAllocator, Request, ServeStats,
+                                ServingEngine, Transport)
+
+__all__ = ["ServingEngine", "CollaborativeServingEngine", "PageAllocator",
+           "ServeStats", "Request", "Transport", "LinkTelemetry",
+           "DriftingChannel", "AdaptivePolicy", "Decision"]

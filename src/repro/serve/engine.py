@@ -1,808 +1,188 @@
 """Batched LM serving with KV caches + collaborative (cloud-edge) mode —
-the deployment side of the paper.
+the deployment side of the paper, composed from the ``serve`` package:
 
-Both engines share one slot-based continuous-batching scheduler
-(``_SlotEngine``): requests queue up, prompts are right-padded to
-power-of-two *buckets* and same-bucket prompts are prefilled together
-into free cache slots (bounding the number of distinct compiled prefill
-shapes — see ``trace_counts``), every **round** advances all occupied
-slots at their own positions (vector ``cache_index``) by one or more
-committed tokens, and a finished request frees its slot — and its KV
-pages — for the next queued prompt mid-flight, including *mid-round*
-when a round commits past its budget.  Sampled tokens stay on device for
-the whole generation; the host sees them once, after the last round (a
-speculative engine additionally syncs one small per-round accept-count
-vector, which the edge needs anyway to schedule the next round).
-
-KV cache layouts (see ``transformer.init_cache`` for shapes):
-
-* **dense** — every slot owns ``max_len`` positions up front; the
-  decode einsum streams the whole ``[B, max_len]`` cache each step.
-* **paged** — slots own a block-table row into a shared page pool
-  (``PageAllocator``); HBM is claimed page-by-page at admission and
-  returned at retirement, and reads run the paged flash kernel
-  (``kernels.paged_attention``) whose cost scales with *allocated*
-  pages, not ``max_len``.
-* **paged + INT8** — pages store 1 B/elem with per-slot symmetric
-  scales calibrated from each prompt at prefill (paper Eq.1 applied to
-  serving state); dequantization happens inside the kernel's QK/AV
-  loops so the cache never materializes above 1 B/elem.
-
-``ServingEngine`` is the cloud-only baseline: one KV cache over the full
-stack (dense fp by default; ``paged=True``/``int8_kv=True`` opt in).
+* ``serve.scheduler`` — the slot/bucket/round continuous-batching loop
+  (``_SlotEngine``) both engines ride, including the re-partition
+  barrier of the online control loop;
+* ``serve.kvcache``   — page-pool bookkeeping for the paged INT8 KV
+  layouts (``PageAllocator``/``_PagedPool``);
+* ``serve.transport`` — channel framing + wire accounting
+  (``ServeStats``) and the EWMA link telemetry;
+* ``serve.cloud``     — the cloud-only baseline ``ServingEngine``;
+* ``serve.spec``      — the speculative draft/verify round machinery
+  (wire protocol documented there);
+* ``serve.policy``    — the telemetry → costmodel/autotune → engine
+  re-tuning policy (``AdaptivePolicy``).
 
 ``CollaborativeServingEngine`` is the paper's mode rebuilt around
 *incremental decode*: the INT8 edge prefix (first ``cut_layer+1``
 blocks, fake-quant lattice == the Pallas int8 kernel's math) and the
 FP32 cloud suffix each own a KV cache covering only their block
-sub-range.  Both sides default to the **paged INT8** layout and share
-one block table, so edge and cloud track identical page geometry and a
-verify-round rollback is a per-slot length decrement on either side.
-The auto-tuner (Algorithm 1) chooses the cut; a second auto-tuner
-(``autotune.tune_spec_k``) chooses the draft length ``spec_k``.
+sub-range, defaulting to the paged INT8 layout over **one shared block
+table**.  Each decode round ships a per-row-quantized ``[B, 1, D]``
+boundary delta (Eq.1/2) uplink and the sampled token downlink; with
+``spec_k = k > 1`` the serial loop restructures into the draft/verify
+rounds of ``serve.spec``.  A ``policy.AdaptivePolicy`` closes the
+auto-tuning loop online: ``spec_k`` switches between rounds, the cut
+layer switches at request-admission boundaries out of the prequantized
+``_CutBank`` (pointer swap, never a requantization), and ``a_bits=None``
+runs the boundary lossless so fp re-partitions are output-transparent
+(property-tested in ``tests/test_adaptive_serve.py``).
 
-Draft/verify wire protocol (``spec_k = k``)
--------------------------------------------
-With ``spec_k == 1`` (the default) every decode round is PR 1's
-incremental step, bit for bit: the edge runs the new token through its
-INT8 prefix, ships one per-row-quantized ``[B, 1, D]`` boundary delta
-(Eq.1) uplink, the cloud suffix finishes the token and returns it
-4 B/row downlink.  Channel RTT is paid twice per generated token.
-
-With ``spec_k = k > 1`` the serial loop is restructured into
-**draft/verify rounds** that amortize that RTT over up to ``k`` tokens:
-
-1. **Draft (edge, local).**  Starting from the last committed token,
-   the edge runs the *full* split model ``k`` times at low precision —
-   its INT8 prefix over the paged INT8 edge cache, then a lightweight
-   INT8 copy of the cloud-suffix weights (the same fake-quant lattice
-   the prefix uses) over a local *draft* KV cache that shares the edge
-   block table.  Each step emits the Eq.(1)-quantized boundary delta
-   and greedily drafts the next token from the local suffix.
-2. **Uplink (one transfer).**  The edge ships the concatenated
-   ``[B, k, D]`` quantized boundary blob — each of the k rows framed
-   with its own per-row scale/zero-point so the cloud dequantizes
-   exactly what a serial step would have seen — plus the ``k-1`` draft
-   tokens the cloud must grade (4 B each).  One channel traversal.
-3. **Verify (cloud, one batched step).**  The cloud suffix runs all
-   ``k`` positions in a single multi-token cached step (the paged
-   kernel's q-block form attends cache + the in-flight block under an
-   intra-block causal mask) and takes the longest prefix of drafts that
-   match its own greedy tokens: ``n_commit = 1 + #leading matches`` —
-   the corrected/next token at the first divergence is always
-   committed, so a round commits between 1 and k tokens and ``k = 1``
-   degenerates to the non-speculative step.
-4. **Rollback (both sides, O(1)).**  Rejected positions are *not*
-   erased: both sides simply keep their per-slot committed length at
-   ``pos + n_commit``.  Paged block tables make this exact — later
-   reads mask stale entries by causality/length and later writes
-   overwrite them in place — so rollback is a length decrement, never a
-   copy.
-5. **Downlink (one transfer).**  The cloud returns the accept mask
-   (``ceil(k/8)`` B/row) and the corrected token (4 B/row); the edge
-   rolls back its own prefix + draft caches the same way and starts the
-   next round.  One channel traversal.
-
-Accounting: ``ServeStats`` charges the uplink blob + draft tokens as
-decode bytes, the accept-mask + token return as decode downlink bytes,
-and counts *accepted* tokens — ``bytes_per_decode_token`` is uplink
-bytes per accepted token (comparable with PR 1/PR 2 numbers, where
-every token was trivially accepted) and
-``wire_bytes_per_accepted_token`` adds the downlink.  Every message
-additionally pays a fixed protocol header (``_MSG_BYTES``) — charged
-once per round instead of once per token, which together with the RTT
-is what speculation buys on the wire.
+This module re-exports the package's public surface, so the historical
+``from repro.serve.engine import X`` keeps working.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import Channel
-from repro.core.quant import compute_qparams, dequantize, quantize
+from repro.core.quant import QuantParams, compute_qparams, dequantize, \
+    quantize
 from repro.models import layers as ML
 from repro.models import transformer as TF
+# re-export shims: the pre-split monolith lived at repro.serve.engine and
+# external code imports these names from here
+from repro.serve.cloud import ServingEngine
+from repro.serve.kvcache import (PageAllocator, _cdiv, _PagedPool,
+                                 _paged_prefill_merge, _paged_prefill_view)
+from repro.serve.policy import AdaptivePolicy, Decision, _CutBank
+from repro.serve.scheduler import (Request, _bucket_len, _jit_phase,
+                                   _SlotEngine)
+from repro.serve.spec import _SpecDraftMixin
+from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
+                                   DriftingChannel, LinkTelemetry, ServeStats,
+                                   Transport)
 
 Params = Any
 
-# wire framing overhead for one quantized blob: f32 scale + f32 zero-point
-_QP_BYTES = 8
-# wire bytes for one token id (cloud→edge return / edge→cloud draft)
-_TOK_BYTES = 4
-# per-*message* protocol framing (TCP/IP-class headers + slot ids/round
-# counter): every channel traversal pays it once, which is exactly what a
-# draft/verify round amortizes k-fold alongside the RTT
-_MSG_BYTES = 64
-
-
-def _cdiv(a: int, b: int) -> int:
-    return -(-a // b)
-
-
-def _bucket_len(plen: int, max_len: int) -> int:
-    """Power-of-two prefill bucket (floor 8, capped at ``max_len``)."""
-    b = 8
-    while b < plen:
-        b *= 2
-    return min(b, max_len)
-
-
-def _jit_phase(fn, donate: Tuple[int, ...] = ()):
-    """``jax.jit`` with the KV-cache argument(s) donated, so the page-pool
-    scatter of every prefill/decode/verify updates the cache *in place*
-    on TPU/GPU instead of doubling resident cache bytes per step.  The
-    engines always consume the returned cache and never touch the donated
-    buffer again, so donation is safe.  XLA:CPU ignores donation and
-    warns per call, so off-accelerator we jit plain."""
-    if donate and jax.default_backend() in ("tpu", "gpu"):
-        return jax.jit(fn, donate_argnums=donate)
-    return jax.jit(fn)
-
-
-# ---------------------------------------------------------------------------
-# Paged-KV bookkeeping (host side)
-# ---------------------------------------------------------------------------
-
-
-class PageAllocator:
-    """LIFO free-list allocator over a fixed pool of KV-cache pages.
-
-    Page 0 is never handed out: retired/idle slots keep a zeroed block
-    table row, so their (masked, harmless) decode writes land in page 0
-    instead of corrupting a page that has been re-allocated to a live
-    request.
-    """
-
-    def __init__(self, num_pages: int):
-        assert num_pages >= 2, "need at least one allocatable page"
-        self.num_pages = num_pages
-        self._free = list(range(num_pages - 1, 0, -1))
-        self._live: set = set()
-
-    @property
-    def num_free(self) -> int:
-        return len(self._free)
-
-    @property
-    def live(self) -> frozenset:
-        return frozenset(self._live)
-
-    def alloc(self, n: int) -> List[int]:
-        if n > len(self._free):
-            raise RuntimeError(
-                f"KV page pool exhausted: need {n}, have {len(self._free)}")
-        pages = [self._free.pop() for _ in range(n)]
-        self._live.update(pages)
-        return pages
-
-    def free(self, pages: Sequence[int]) -> None:
-        for p in pages:
-            if p not in self._live:
-                raise ValueError(f"double free of page {p}")
-            self._live.remove(p)
-            self._free.append(p)
-
-
-class _PagedPool:
-    """Block table + allocator for one engine-side page pool.
-
-    Pages for a request are claimed once at admission — enough to cover
-    its padded prompt plus its (known) generation budget, plus any
-    speculative-round headroom — and returned the moment the scheduler
-    retires the slot.  The collaborative engine shares one pool (one
-    block table) across its edge-prefix, cloud-suffix, and draft caches:
-    all three see identical page geometry, so a verify-round rollback is
-    the same length decrement on every cache.
-    """
-
-    def __init__(self, max_batch: int, pages_per_slot: int, num_pages: int,
-                 page_size: int):
-        self.page_size = page_size
-        self.pages_per_slot = pages_per_slot
-        self.allocator = PageAllocator(num_pages)
-        self.bt = np.zeros((max_batch, pages_per_slot), np.int32)
-        self._slot_pages: Dict[int, List[int]] = {}
-        self._dev: Optional[jax.Array] = None
-
-    @classmethod
-    def build(cls, max_batch: int, max_len: int, page_size: int,
-              num_pages: Optional[int] = None) -> "_PagedPool":
-        """Standard sizing: worst case ``max_batch`` full-length slots
-        plus the reserved dump page, unless ``num_pages`` undersizes the
-        pool on purpose (admission then backpressures, see
-        ``_SlotEngine._can_admit``)."""
-        pages_per_slot = _cdiv(max_len, page_size)
-        if num_pages is None:
-            num_pages = max_batch * pages_per_slot + 1
-        return cls(max_batch, pages_per_slot, num_pages, page_size)
-
-    def pages_needed(self, plen: int, max_new: int, padded_len: int) -> int:
-        return _cdiv(max(int(plen) + int(max_new), int(padded_len)),
-                     self.page_size)
-
-    def can_admit(self, shapes: Sequence[Tuple[int, int]],
-                  padded_len: int) -> bool:
-        """Would a prefill group of (plen, max_new) shapes fit the free
-        list right now?"""
-        return sum(self.pages_needed(p, m, padded_len)
-                   for p, m in shapes) <= self.allocator.num_free
-
-    def live_cache_bytes(self, cache: Dict[str, jax.Array]) -> int:
-        """Bytes resident in currently-allocated pages (+ scales) of the
-        paged ``cache`` this pool indexes — the demand-paging footprint,
-        as opposed to the pool's capacity."""
-        per_page = int(np.prod(cache["k_pages"].shape[2:])) \
-            * cache["k_pages"].dtype.itemsize
-        n_layers = cache["k_pages"].shape[0]
-        scales = sum(v.size * v.dtype.itemsize
-                     for k, v in cache.items() if "scale" in k)
-        return 2 * n_layers * len(self.allocator.live) * per_page + scales
-
-    def admit(self, slots: Sequence[int], plens: Sequence[int],
-              max_news: Sequence[int], padded_len: int) -> jax.Array:
-        """Allocate pages for a prefill group; returns the group's block
-        table rows [n, pages_per_slot]."""
-        for s, pl_, mn in zip(slots, plens, max_news):
-            pages = self.allocator.alloc(
-                self.pages_needed(pl_, mn, padded_len))
-            self._slot_pages[int(s)] = pages
-            self.bt[s, :] = 0
-            self.bt[s, :len(pages)] = pages
-        self._dev = None
-        # trim to the pages the padded prompt can touch: the prefill's
-        # q-block read costs O(table width), so handing it the full
-        # pages_per_slot row would make prefill scale with max_len
-        # instead of the bucket (the generation's later pages are only
-        # reachable by decode, which re-reads through table_dev)
-        width = max(1, _cdiv(padded_len, self.page_size))
-        # explicit copy: jax on CPU may zero-copy-alias numpy buffers, and
-        # ``bt`` is mutated on the host while async decode steps are still
-        # in flight — sharing it would race
-        return jnp.array(self.bt[np.asarray(slots)][:, :width], copy=True)
-
-    def retire(self, slot: int) -> None:
-        pages = self._slot_pages.pop(int(slot), None)
-        if pages is not None:
-            self.allocator.free(pages)
-            self.bt[slot, :] = 0
-            self._dev = None
-
-    def table_dev(self) -> jax.Array:
-        """Block table on device, trimmed to the pages actually in use
-        (rounded up to a power of two, so decode retraces are bounded by
-        log2(pages_per_slot) widths, not every occupancy) — the decode
-        read then costs O(allocated pages), not O(max_len).  Cached
-        until the next admit/retire.  Copied, never aliased: the host
-        mutates ``bt`` while earlier async decode steps may still be
-        reading the device buffer."""
-        if self._dev is None:
-            used = max((len(p) for p in self._slot_pages.values()),
-                       default=1)
-            width = 1
-            while width < used:
-                width *= 2
-            width = min(width, self.pages_per_slot)
-            self._dev = jnp.array(self.bt[:, :width], copy=True)
-        return self._dev
-
-
-def _paged_prefill_view(cache: Dict[str, jax.Array], n_layers: int, n: int,
-                        n_kv: int) -> Dict[str, jax.Array]:
-    """Group-local view of a paged cache for one prefill call: the
-    shared page pool plus fresh scale rows for the ``n``-row group (the
-    prefill calibrates them; scatter back with _paged_prefill_merge)."""
-    group = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
-    if "k_scale" in cache:
-        group["k_scale"] = jnp.zeros((n_layers, n, n_kv), jnp.float32)
-        group["v_scale"] = jnp.zeros_like(group["k_scale"])
-    return group
-
-
-def _paged_prefill_merge(cache: Dict[str, jax.Array],
-                         group: Dict[str, jax.Array],
-                         slots: jax.Array) -> Dict[str, jax.Array]:
-    cache = dict(cache, k_pages=group["k_pages"], v_pages=group["v_pages"])
-    if "k_scale" in cache:
-        cache["k_scale"] = cache["k_scale"].at[:, slots].set(
-            group["k_scale"])
-        cache["v_scale"] = cache["v_scale"].at[:, slots].set(
-            group["v_scale"])
-    return cache
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # [S] int32
-    max_new_tokens: int = 16
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@dataclasses.dataclass
-class ServeStats:
-    """Per-phase serving counters.
-
-    ``transmitted_bytes`` is the total over the wire — prefill and
-    decode uplinks plus every cloud→edge downlink, each *message*
-    carrying its ``_MSG_BYTES`` protocol header on top of the payload
-    (headers, like the RTT, are paid per traversal — the quantity a
-    draft/verify round amortizes k-fold).  ``decode_bytes`` is the
-    decode-phase *uplink*: per-row-quantized boundary deltas (one
-    ``[1, D]`` frame per live request per drafted position) plus, in
-    speculative rounds, the 4 B draft-token ids the cloud grades.  The
-    per-round ``decode_bytes_log`` records those uplinks: each entry
-    shrinks as slots free and never grows with sequence length, which
-    is the O(1)-per-token property.  ``downlink_bytes`` counts the
-    return direction — the sampled/corrected token (4 B/row) plus, in
-    speculative rounds, the accept mask (``ceil(k/8)`` B/row); its
-    decode-phase share is ``decode_downlink_bytes``.  Prefill uplinks
-    are charged by each request's *true* prompt length — bucket padding
-    is a compile-shape artifact and never crosses the wire.
-
-    ``decode_tokens`` counts **accepted (committed) tokens** — for the
-    non-speculative engines every decoded token is trivially accepted,
-    so the PR 1/PR 2 meaning is unchanged.  ``drafted_tokens`` /
-    ``draft_hits`` grade the speculative drafts the verify step
-    compared (k-1 per round per live slot), giving ``acceptance_rate``.
-    ``bytes_per_decode_token`` is uplink bytes per accepted token;
-    ``wire_bytes_per_accepted_token`` adds the decode downlink.
-
-    ``prefill_s``/``decode_s`` are wall-clock phase totals, populated
-    when the engine runs with ``timed=True`` (timing blocks on device
-    results, so it is off by default to keep the decode loop fully
-    async)."""
-    prefill_calls: int = 0
-    decode_steps: int = 0
-    transmitted_bytes: int = 0
-    channel_latency_s: float = 0.0
-    # per-phase splits
-    prefill_bytes: int = 0
-    decode_bytes: int = 0
-    decode_bytes_log: List[int] = dataclasses.field(default_factory=list)
-    downlink_bytes: int = 0
-    decode_downlink_bytes: int = 0
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
-    # speculative draft/verify rounds
-    spec_rounds: int = 0
-    drafted_tokens: int = 0
-    draft_hits: int = 0
-
-    def bytes_per_decode_token(self) -> float:
-        """Decode *uplink* bytes per accepted token (PR 1/PR 2 metric)."""
-        return self.decode_bytes / max(self.decode_tokens, 1)
-
-    def wire_bytes_per_accepted_token(self) -> float:
-        """Both directions per accepted token: uplink deltas + drafts
-        and the downlink accept-mask + corrected token."""
-        return (self.decode_bytes + self.decode_downlink_bytes) \
-            / max(self.decode_tokens, 1)
-
-    def acceptance_rate(self) -> float:
-        """Fraction of graded speculative drafts the verify accepted."""
-        return self.draft_hits / max(self.drafted_tokens, 1)
-
-    def report(self) -> Dict[str, float]:
-        return {
-            "prefill_calls": self.prefill_calls,
-            "decode_steps": self.decode_steps,
-            "prefill_tokens": self.prefill_tokens,
-            "decode_tokens": self.decode_tokens,
-            "accepted_tokens": self.decode_tokens,
-            "transmitted_bytes": self.transmitted_bytes,
-            "prefill_bytes": self.prefill_bytes,
-            "decode_bytes": self.decode_bytes,
-            "downlink_bytes": self.downlink_bytes,
-            "bytes_per_decode_token": self.bytes_per_decode_token(),
-            "wire_bytes_per_accepted_token":
-                self.wire_bytes_per_accepted_token(),
-            "spec_rounds": self.spec_rounds,
-            "drafted_tokens": self.drafted_tokens,
-            "acceptance_rate": self.acceptance_rate(),
-            "channel_latency_s": self.channel_latency_s,
-            "prefill_s": self.prefill_s,
-            "decode_s": self.decode_s,
-        }
-
-
-class _SlotEngine:
-    """Slot-based continuous-batching scheduler shared by both engines.
-
-    Subclasses implement ``_admit`` (prefill a prompt group into specific
-    slots), ``_decode_all`` (advance every slot one token) and/or
-    ``_round`` (advance every slot by a *variable* number of committed
-    tokens — the speculative draft/verify round), and may hook
-    ``_retire`` (a slot's request finished — e.g. return its KV pages).
-    The scheduler keeps the current token and position of every slot on
-    device; request outputs are transferred to the host once, after the
-    final round.
-
-    The loop is organised around **rounds**: admission commits one token
-    per new slot (the prefill's argmax), and every scheduler turn after
-    that commits ``counts[s]`` tokens per occupied slot, where the
-    non-speculative engines statically commit one (``counts is None`` —
-    no device sync, the loop stays fully async) and a speculative round
-    returns the verify step's per-slot accept counts.  Per-slot
-    accepted-length bookkeeping trims a round that overshoots a
-    request's budget and retires the slot mid-stream ("retire on
-    accept"), so the next queued prompt gets the slot and its pages.
-
-    Admission pads each prompt group to a power-of-two bucket
-    (``_bucket_len``), so the number of distinct prefill trace shapes is
-    bounded by O(log2(max_len) · max_batch) instead of growing with
-    every unique prompt length.  ``trace_counts`` counts actual
-    retraces of the jit'd phase functions; tests pin it.
-    """
-
-    def __init__(self, cfg: TF.LMConfig, *, max_batch: int, max_len: int,
-                 timed: bool = False):
-        self.cfg = dataclasses.replace(cfg, remat=False)
-        self.max_batch = max_batch
-        self.max_len = max_len
-        self.timed = timed
-        self.stats = ServeStats()
-        self.trace_counts = {"prefill": 0, "decode": 0, "spec_draft": 0,
-                             "verify": 0}
-
-    # -- subclass interface -------------------------------------------------
-    def _admit(self, toks: jax.Array, plens: np.ndarray, max_news: np.ndarray,
-               slots: np.ndarray, cur: jax.Array, pos: jax.Array,
-               ) -> Tuple[jax.Array, jax.Array]:
-        raise NotImplementedError
-
-    def _decode_all(self, cur: jax.Array, pos: jax.Array,
-                    n_active: int) -> Tuple[jax.Array, jax.Array]:
-        raise NotImplementedError
-
-    def _round(self, cur: jax.Array, pos: jax.Array, slots: np.ndarray,
-               ) -> Tuple[jax.Array, jax.Array, jax.Array,
-                          Optional[np.ndarray]]:
-        """Advance the occupied ``slots`` by one round.
-
-        Returns ``(cur, pos, tokens, counts)``: ``tokens`` is the
-        ``[max_batch, k]`` device block of tokens the round produced and
-        ``counts`` the per-slot number of *committed* leading tokens —
-        ``None`` means "statically one per slot" (the non-speculative
-        path, which therefore never blocks on the device)."""
-        cur, pos = self._decode_all(cur, pos, len(slots))
-        return cur, pos, cur[:, None], None
-
-    def _round_headroom(self) -> int:
-        """Cache positions a round may write *past* a request's budget
-        (speculative drafting overshoots by up to k-1); admission
-        reserves them so overshoot writes can never alias another
-        request's pages."""
-        return 0
-
-    def _retire(self, slot: int) -> None:
-        """Hook: the request in ``slot`` finished (free paged KV, etc.)."""
-
-    def _can_admit(self, group_shapes: List[Tuple[int, int]], plen: int,
-                   max_new: int, bucket: int) -> bool:
-        """Hook: may this request join the prefill group right now?
-        ``group_shapes`` are the (plen, max_new) pairs already accepted
-        into the group this round.  Paged engines refuse when the page
-        pool can't cover the whole group, backpressuring admission until
-        retirements return pages."""
-        return True
-
-    # -- shared helpers -----------------------------------------------------
-    def _rope(self):
-        return ML.rope_table(self.max_len, self.cfg.hd,
-                             base=self.cfg.rope_base, dtype=self.cfg.dtype)
-
-    def _timed(self, phase: str, fn):
-        if not self.timed:
-            return fn()
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(fn())
-        setattr(self.stats, phase,
-                getattr(self.stats, phase) + time.perf_counter() - t0)
-        return out
-
-    # -- scheduler ----------------------------------------------------------
-    def generate(self, prompts: List[np.ndarray], *,
-                 max_new_tokens: int = 16) -> List[List[int]]:
-        """Greedy-decode a list of prompts with continuous batching."""
-        reqs = [Request(uid=i, prompt=np.asarray(p),
-                        max_new_tokens=max_new_tokens)
-                for i, p in enumerate(prompts)]
-        if reqs:
-            self._run(reqs)
-        return [r.out_tokens for r in reqs]
-
-    def _run(self, reqs: List[Request]) -> None:
-        queue = deque(reqs)
-        active: Dict[int, Tuple[Request, int]] = {}  # slot -> (req, n_committed)
-        free = list(range(self.max_batch))
-        cur = jnp.zeros((self.max_batch,), jnp.int32)
-        pos = jnp.zeros((self.max_batch,), jnp.int32)
-        # every admission and every round logs (token block [B, k], takes);
-        # token blocks stay on device until one concat+transfer at the end
-        rounds: List[Tuple[jax.Array, List[Tuple[Request, int, int]]]] = []
-        while queue or active:
-            # admit queued prompts into free slots, grouping by prefill
-            # bucket so one batched, fixed-shape prefill call covers the
-            # whole group; a paged engine may refuse (pool backpressure),
-            # in which case the request waits for a retirement
-            stalled = False
-            while free and queue and not stalled:
-                bucket = _bucket_len(len(queue[0].prompt), self.max_len)
-                group, slots = [], []
-                shapes: List[Tuple[int, int]] = []
-                while free and queue and _bucket_len(
-                        len(queue[0].prompt), self.max_len) == bucket:
-                    r = queue[0]
-                    assert (len(r.prompt) + r.max_new_tokens
-                            + self._round_headroom()) <= self.max_len, \
-                        "prompt + generation (+ draft headroom) exceeds " \
-                        "cache max_len"
-                    if not self._can_admit(shapes, len(r.prompt),
-                                           r.max_new_tokens, bucket):
-                        stalled = True
-                        break
-                    shapes.append((len(r.prompt), r.max_new_tokens))
-                    group.append(queue.popleft())
-                    slots.append(free.pop(0))
-                if not group:
-                    break
-                toks = np.zeros((len(group), bucket), np.int32)
-                for i, r in enumerate(group):
-                    toks[i, :len(r.prompt)] = r.prompt
-                plens = np.asarray([len(r.prompt) for r in group], np.int32)
-                max_news = np.asarray([r.max_new_tokens for r in group],
-                                      np.int32)
-                slots_a = np.asarray(slots, np.int32)
-                toks_j = jnp.asarray(toks)
-                cur, pos = self._timed(
-                    "prefill_s",
-                    lambda: self._admit(toks_j, plens, max_news, slots_a,
-                                        cur, pos))
-                self.stats.prefill_calls += 1
-                self.stats.prefill_tokens += int(plens.sum())
-                # the prefill's argmax is the group's first committed token
-                rounds.append((cur[:, None],
-                               [(r, s, 1) for r, s in zip(group, slots)]))
-                for r, s in zip(group, slots):
-                    active[s] = (r, 1)
-            if stalled and not active:
-                r = queue[0]
-                raise RuntimeError(
-                    f"KV page pool too small for request uid={r.uid} "
-                    f"(prompt {len(r.prompt)} + {r.max_new_tokens} new "
-                    f"tokens) even with every slot idle")
-            # retire requests whose budget just filled — before the next
-            # round, so no request pays for a round it never reads and
-            # its slot (and KV pages) free one round earlier for the queue
-            for s in [s for s, (r, c) in active.items()
-                      if c >= r.max_new_tokens]:
-                r, _ = active.pop(s)
-                r.done = True
-                self._retire(s)
-                free.append(s)
-            if active:
-                act_slots = np.asarray(sorted(active), np.int32)
-                cur, pos, toks_r, counts = self._timed(
-                    "decode_s",
-                    lambda: self._round(cur, pos, act_slots))
-                takes = []
-                for s in act_slots:
-                    r, c = active[int(s)]
-                    n = 1 if counts is None else int(counts[s])
-                    n = min(n, r.max_new_tokens - c)  # trim budget overshoot
-                    active[int(s)] = (r, c + n)
-                    takes.append((r, int(s), n))
-                rounds.append((toks_r, takes))
-                self.stats.decode_steps += 1
-                self.stats.decode_tokens += sum(n for _, _, n in takes)
-        # single device→host transfer for the whole run
-        all_toks = np.asarray(
-            jnp.concatenate([t for t, _ in rounds], axis=1))
-        col = 0
-        for toks_r, takes in rounds:
-            for r, s, n in takes:
-                r.out_tokens.extend(int(t) for t in all_toks[s, col:col + n])
-            col += toks_r.shape[1]
-
-
-class ServingEngine(_SlotEngine):
-    """Cloud-only batched engine (greedy decode, continuous batching).
-
-    ``paged=True`` swaps the dense per-slot cache for the block-table
-    page pool (+ ``int8_kv=True`` for 1 B/elem pages with per-slot
-    scales); ``cache_dtype`` overrides the dense cache's storage dtype
-    (e.g. bf16 for the fp16-cache baseline in the benchmarks)."""
-
-    def __init__(self, params: Params, cfg: TF.LMConfig, *,
-                 max_batch: int = 4, max_len: int = 128,
-                 paged: bool = False, page_size: int = 16,
-                 int8_kv: bool = False, num_pages: Optional[int] = None,
-                 cache_dtype=None, timed: bool = False):
-        super().__init__(cfg, max_batch=max_batch, max_len=max_len,
-                         timed=timed)
-        self.params = params
-        self.paged = paged
-        self.page_size = page_size
-        self.int8_kv = int8_kv
-        if paged:
-            self._pool = _PagedPool.build(max_batch, max_len, page_size,
-                                          num_pages)
-            self._cache = TF.init_cache(
-                self.cfg, max_batch, max_len, paged=True,
-                page_size=page_size, quantized=int8_kv,
-                num_pages=self._pool.allocator.num_pages, dtype=cache_dtype)
-            self._prefill = _jit_phase(self._paged_prefill_impl, donate=(2,))
-        else:
-            self._cache = TF.init_cache(self.cfg, max_batch, max_len=max_len,
-                                        dtype=cache_dtype,
-                                        quantized=int8_kv)
-            self._prefill = _jit_phase(self._prefill_impl, donate=(2,))
-        self._decode = _jit_phase(self._decode_impl, donate=(2,))
-
-    def _prefill_impl(self, params, toks, cache, slots, cur, pos, plens):
-        self.trace_counts["prefill"] += 1
-        n, _ = toks.shape
-        small = TF.init_cache(self.cfg, n, max_len=self.max_len,
-                              quantized=self.int8_kv,
-                              dtype=cache["k"].dtype)
-        logits, small = TF.prefill(params, toks, self.cfg, cache=small,
-                                   last_pos=plens - 1)
-        cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
-                               for k in ("k", "v")})
-        cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
-        pos = pos.at[slots].set(plens)
-        return cache, cur, pos
-
-    def _paged_prefill_impl(self, params, toks, cache, bt_rows, slots, cur,
-                            pos, plens):
-        self.trace_counts["prefill"] += 1
-        group = _paged_prefill_view(cache, self.cfg.n_layers, toks.shape[0],
-                                    self.cfg.n_kv)
-        logits, group = TF.prefill(params, toks, self.cfg, cache=group,
-                                   block_tables=bt_rows, last_pos=plens - 1)
-        cache = _paged_prefill_merge(cache, group, slots)
-        cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
-        pos = pos.at[slots].set(plens)
-        return cache, cur, pos
-
-    def _decode_impl(self, params, cur, cache, pos, bt):
-        self.trace_counts["decode"] += 1
-        logits, cache = TF.decode_step(params, cur, cache, pos, self.cfg,
-                                       block_tables=bt)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
-
-    def _admit(self, toks, plens, max_news, slots, cur, pos):
-        if self.paged:
-            bt_rows = self._pool.admit(slots, plens, max_news, toks.shape[1])
-            self._cache, cur, pos = self._prefill(
-                self.params, toks, self._cache, bt_rows, jnp.asarray(slots),
-                cur, pos, jnp.asarray(plens))
-        else:
-            self._cache, cur, pos = self._prefill(
-                self.params, toks, self._cache, jnp.asarray(slots), cur, pos,
-                jnp.asarray(plens))
-        return cur, pos
-
-    def _decode_all(self, cur, pos, n_active):
-        bt = self._pool.table_dev() if self.paged else None
-        cur, self._cache, pos = self._decode(self.params, cur,
-                                             self._cache, pos, bt)
-        return cur, pos
-
-    def _retire(self, slot):
-        if self.paged:
-            self._pool.retire(slot)
-
-    def _can_admit(self, group_shapes, plen, max_new, bucket):
-        if not self.paged:
-            return True
-        return self._pool.can_admit(group_shapes + [(plen, max_new)], bucket)
-
-    def cache_bytes(self, *, live_only: bool = False) -> int:
-        """Cache footprint in bytes.  ``live_only`` counts just the
-        pages currently allocated to requests (the demand-paging win)."""
-        if self.paged and live_only:
-            return self._pool.live_cache_bytes(self._cache)
-        return sum(v.size * v.dtype.itemsize for v in self._cache.values())
-
-
-class CollaborativeServingEngine(_SlotEngine):
-    """Paper mode with incremental decode: INT8 edge prefix and FP32
-    cloud suffix hold *split* KV caches over their own block sub-ranges;
-    each decode round ships quantized boundary deltas (Eq.1/2) through
-    the channel instead of the whole growing blob.
-
-    Both caches default to the paged INT8 layout over **one shared block
-    table**: pages allocated on demand through ``PageAllocator``,
-    per-slot symmetric scales calibrated from each prompt at prefill,
-    reads through the paged flash kernel, and a rollback of rejected
-    speculative positions that is a per-slot length decrement on either
-    side of the cut.  ``edge_paged=False`` / ``edge_int8=False`` /
-    ``cloud_paged=False`` / ``cloud_int8=False`` fall back to the dense
-    / fp layouts (the PR-1-era configuration, kept as the equivalence
-    oracle in tests).
-
-    ``spec_k > 1`` turns each decode step into a speculative draft/verify
-    round (see the module docstring for the wire protocol): the edge
-    drafts k tokens locally through an INT8 copy of the cloud-suffix
-    weights over a draft cache that shares the edge block table, and the
-    cloud verifies all k in one batched multi-token step with
-    longest-prefix acceptance.  ``spec_k=1`` (default) is PR 1's serial
-    step, bit for bit.  ``spec_k="auto"`` asks ``autotune.tune_spec_k``
-    for the round length that minimizes predicted time per accepted
-    token on this engine's channel at ``spec_acceptance``."""
+__all__ = ["ServingEngine", "CollaborativeServingEngine", "PageAllocator",
+           "ServeStats", "Request", "Transport", "LinkTelemetry",
+           "DriftingChannel", "AdaptivePolicy", "Decision",
+           "_MSG_BYTES", "_QP_BYTES", "_TOK_BYTES"]
+
+
+class CollaborativeServingEngine(_SpecDraftMixin, _SlotEngine):
+    """Paper mode with incremental decode over split, shared-table paged
+    INT8 KV caches (see the module docstring), plus the online tuning
+    loop.
+
+    ``edge_paged=False`` / ``edge_int8=False`` / ``cloud_paged=False`` /
+    ``cloud_int8=False`` fall back to the dense / fp layouts (the
+    PR-1-era configuration, kept as the equivalence oracle in tests).
+
+    ``spec_k > 1`` turns each decode step into a speculative
+    draft/verify round; ``spec_k=1`` (default) is PR 1's serial step,
+    bit for bit.  ``spec_k="auto"`` asks ``autotune.tune_spec_k`` for
+    the starting round length *and* keeps it self-correcting: the
+    engine's measured ``acceptance_rate()`` feeds back into the tuner
+    between requests, replacing the ``spec_acceptance`` prior.
+
+    ``policy="auto"`` (or an explicit ``AdaptivePolicy``) closes the
+    full loop: link telemetry re-tunes both ``spec_k`` (between rounds)
+    and ``cut_layer`` (at request-admission boundaries, via the
+    re-partition barrier + ``_CutBank``).  ``candidate_cuts`` overrides
+    the default cut grid {0, mid, last-1} ∪ {cut_layer}.  k switches
+    are immediate between rounds, except raising out of k=1 with live
+    requests: their draft caches were never filled (k=1 rounds are the
+    cheap serial step), so the raise drains them first — the same
+    barrier a re-partition uses."""
 
     def __init__(self, params: Params, cfg: TF.LMConfig, *, cut_layer: int,
                  channel: Optional[Channel] = None, max_len: int = 128,
-                 a_bits: int = 8, max_batch: int = 4,
+                 a_bits: Optional[int] = 8, max_batch: int = 4,
                  edge_paged: bool = True, edge_int8: bool = True,
                  cloud_paged: bool = True, cloud_int8: bool = True,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  spec_k: Union[int, str] = 1, spec_acceptance: float = 0.8,
+                 policy: Union[AdaptivePolicy, str, None] = None,
+                 candidate_cuts: Optional[Tuple[int, ...]] = None,
                  timed: bool = False):
         assert 0 <= cut_layer < cfg.n_layers, \
             f"cut_layer {cut_layer} outside [0, {cfg.n_layers})"
         super().__init__(cfg, max_batch=max_batch, max_len=max_len,
                          timed=timed)
         self.cut = cut_layer
-        self.channel = channel or Channel(bandwidth_bytes_per_s=float("inf"))
+        self.transport = Transport(channel)
         self.a_bits = a_bits
-        self.n_edge = cut_layer + 1
-        self.n_cloud = cfg.n_layers - self.n_edge
         self.edge_paged = edge_paged
         self.edge_int8 = edge_int8
         self.cloud_paged = cloud_paged
         self.cloud_int8 = cloud_int8
         self.page_size = page_size
-        if spec_k == "auto":
+        # the channel the offline tuners assume before telemetry locks on
+        # (a DriftingChannel contributes its t=0 phase — the site survey)
+        initial_ch = self.transport.channel
+        initial_ch = getattr(initial_ch, "phase", initial_ch)
+
+        spec_auto = spec_k == "auto"
+        if spec_auto:
             from repro.core.autotune import spec_k_for_lm
             spec_k = spec_k_for_lm(cfg, cut_layer, batch=max_batch,
-                                   channel=self.channel,
+                                   channel=initial_ch,
                                    acceptance=spec_acceptance)[0].k
         assert isinstance(spec_k, int) and spec_k >= 1, spec_k
         self.spec_k = spec_k
 
-        self.edge_blocks, self.cloud_blocks = TF.split_blocks(
-            params, self.cfg, cut_layer)
+        # -- control plane ---------------------------------------------------
+        if policy == "auto":
+            assert cut_layer <= cfg.n_layers - 2, \
+                "the adaptive policy needs at least one cloud block at " \
+                "every candidate cut"
+            cuts = candidate_cuts or tuple(sorted(
+                {0, (cfg.n_layers - 1) // 2, cfg.n_layers - 2, cut_layer}))
+            policy = AdaptivePolicy(cfg, batch=max_batch, cuts=cuts,
+                                    ks=(1, 2, 4, 8),
+                                    fallback_channel=initial_ch,
+                                    acceptance_prior=spec_acceptance)
+        elif policy is None and spec_auto:
+            # spec_k="auto" alone: k-only self-correction between requests
+            policy = AdaptivePolicy(cfg, batch=max_batch, cuts=None,
+                                    ks=(1, 2, 4, 8, 16),
+                                    fallback_channel=initial_ch,
+                                    acceptance_prior=spec_acceptance,
+                                    k_between_requests_only=True)
+        self.policy: Optional[AdaptivePolicy] = policy or None
+        if self.policy is not None and self.policy.cuts is not None:
+            assert cut_layer in self.policy.cuts, \
+                f"cut_layer {cut_layer} not in candidate cuts " \
+                f"{self.policy.cuts}"
+        # largest k any controller may pick — draft machinery and page
+        # headroom are provisioned for it once, up front
+        self._spec_max = self.spec_k if self.policy is None \
+            else max(self.spec_k, *self.policy.ks)
+
         self.embed = params["embed"]
         self.tail = {"final_norm": params["final_norm"],
                      "lm_head": params["lm_head"]}
-        # edge weights are INT8-quantized at deployment (fake-quant lattice)
-        self._edge_qctx = ML.QuantCtx(mode="dynamic", a_bits=a_bits)
-        # one shared page pool / block table for every split cache
+        # edge weights are INT8-quantized at deployment: the bank bakes
+        # the fake-quant lattice into the stored params once
+        # (quantize_weights=False at runtime — same math, no per-step
+        # weight requantization); a_bits=None serves the edge lossless
+        self._edge_qctx = None if a_bits is None else \
+            ML.QuantCtx(mode="dynamic", a_bits=a_bits,
+                        quantize_weights=False)
+        deploy_qctx = None if a_bits is None else \
+            ML.QuantCtx(mode="dynamic", a_bits=a_bits)
+        # one shared page pool / block table for every split cache; its
+        # geometry is cut-independent, so it survives re-partitions
         self._pool: Optional[_PagedPool] = None
         if edge_paged or cloud_paged:
             self._pool = _PagedPool.build(max_batch, max_len, page_size,
                                           num_pages)
-        n_pool = self._pool.allocator.num_pages if self._pool else None
-        # split KV caches: edge prefix / cloud suffix block sub-ranges
-        if edge_paged:
-            self._edge_cache = TF.init_cache(
-                self.cfg, max_batch, max_len, layers=self.n_edge,
-                paged=True, quantized=edge_int8, page_size=page_size,
-                num_pages=n_pool)
-        else:
-            self._edge_cache = TF.init_cache(self.cfg, max_batch, max_len,
-                                             layers=self.n_edge,
-                                             quantized=edge_int8)
-        if cloud_paged:
-            self._cloud_cache = TF.init_cache(
-                self.cfg, max_batch, max_len, layers=self.n_cloud,
-                paged=True, quantized=cloud_int8, page_size=page_size,
-                num_pages=n_pool)
-        else:
-            self._cloud_cache = TF.init_cache(self.cfg, max_batch, max_len,
-                                              layers=self.n_cloud)
+        # every cut the engine may ever serve goes into the bank up front
+        # (policy candidates, or explicit candidate_cuts for externally
+        # scripted re-partitions)
+        bank_cuts = {cut_layer} | set(candidate_cuts or ())
+        if self.policy is not None and self.policy.cuts is not None:
+            bank_cuts |= set(self.policy.cuts)
+        self._bank = _CutBank(params, cfg, bank_cuts, deploy_qctx)
+        self._set_cut(cut_layer, count=False)
+
         self._edge = jax.jit(self._edge_impl)
         self._cloud = jax.jit(self._cloud_impl)
         self._edge_prefill = _jit_phase(self._edge_prefill_impl, donate=(3,))
@@ -810,76 +190,124 @@ class CollaborativeServingEngine(_SlotEngine):
                                          donate=(4,))
         self._edge_decode = _jit_phase(self._edge_decode_impl, donate=(3,))
         self._cloud_decode = _jit_phase(self._cloud_decode_impl, donate=(4,))
-        if self.spec_k > 1:
-            # the edge's draft model: the cloud-suffix weights served
-            # through the same INT8 fake-quant lattice as the prefix
-            # (1 B/elem deployed — see edge_model_bytes), plus a draft KV
-            # cache in the edge's own layout over the shared block table
-            self.draft_blocks = self.cloud_blocks
-            if edge_paged:
-                self._draft_cache = TF.init_cache(
-                    self.cfg, max_batch, max_len, layers=self.n_cloud,
-                    paged=True, quantized=edge_int8, page_size=page_size,
-                    num_pages=n_pool)
-            else:
-                self._draft_cache = TF.init_cache(
-                    self.cfg, max_batch, max_len, layers=self.n_cloud,
-                    quantized=edge_int8)
+        if self._spec_max > 1:
             self._draft_prefill = _jit_phase(self._draft_prefill_impl,
                                              donate=(3,))
-            self._spec_draft = _jit_phase(self._spec_draft_impl,
-                                          donate=(5, 6))
-            self._verify = _jit_phase(self._verify_impl, donate=(6,))
+            # per-k jitted draft/verify (k is the scan length / q-block
+            # width, a trace constant); built on first use of each k
+            self._spec_jits: Dict[int, Tuple[Any, Any]] = {}
 
-    # -- wire accounting ----------------------------------------------------
-    def _charge(self, nbytes: int, *, phase: str, log: bool = True) -> None:
-        self.stats.transmitted_bytes += int(nbytes)
-        self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
-        if phase == "prefill":
-            self.stats.prefill_bytes += int(nbytes)
+    # -- wire plumbing -------------------------------------------------------
+    @property
+    def channel(self):
+        return self.transport.channel
+
+    @channel.setter
+    def channel(self, ch) -> None:
+        self.transport.channel = ch
+
+    @property
+    def telemetry(self) -> LinkTelemetry:
+        return self.transport.telemetry
+
+    # -- online re-tuning ----------------------------------------------------
+    def _set_cut(self, cut: int, *, count: bool = True) -> None:
+        """Re-partition at ``cut`` — only ever called with no occupied
+        slots (construction, or the scheduler's drained admission
+        boundary).  Weights come out of the bank (pointer swap); the
+        split caches are re-initialized for the new layer sub-ranges
+        (their contents belong to retired requests); the page pool,
+        block table, telemetry, and jitted phase callables all carry
+        over (jax re-traces per layer-count automatically and caches
+        each cut's traces, so flapping between two cuts compiles each
+        side once)."""
+        cfg = self.cfg
+        self.cut = cut
+        self.n_edge = cut + 1
+        self.n_cloud = cfg.n_layers - self.n_edge
+        self.edge_blocks, self.cloud_blocks, self.draft_blocks = \
+            self._bank.get(cut)
+        n_pool = self._pool.allocator.num_pages if self._pool else None
+        if self.edge_paged:
+            self._edge_cache = TF.init_cache(
+                cfg, self.max_batch, self.max_len, layers=self.n_edge,
+                paged=True, quantized=self.edge_int8,
+                page_size=self.page_size, num_pages=n_pool)
         else:
-            self.stats.decode_bytes += int(nbytes)
-            if log:
-                self.stats.decode_bytes_log.append(int(nbytes))
-
-    def _account(self, blob: jax.Array, *, phase: str,
-                 rows: Optional[int] = None,
-                 row_elems: Optional[np.ndarray] = None) -> None:
-        """Charge the wire for the occupied batch rows of ``blob``.
-
-        The jit'd decode step always computes the full fixed-shape
-        [max_batch, 1, D] delta, but idle slots would never be sent, so
-        the simulated wire carries only the active rows — each framed
-        with its own Eq.(1) scale/zero-point (per-row quantization).
-        ``row_elems`` overrides the per-row payload element count: the
-        prefill blob is bucket-padded on device, but only each request's
-        true prompt activations cross the wire."""
-        itemsize = blob.dtype.itemsize
-        if row_elems is not None:
-            nbytes = int(sum(int(e) * itemsize + _QP_BYTES
-                             for e in row_elems))
+            self._edge_cache = TF.init_cache(cfg, self.max_batch,
+                                             self.max_len,
+                                             layers=self.n_edge,
+                                             quantized=self.edge_int8)
+        if self.cloud_paged:
+            self._cloud_cache = TF.init_cache(
+                cfg, self.max_batch, self.max_len, layers=self.n_cloud,
+                paged=True, quantized=self.cloud_int8,
+                page_size=self.page_size, num_pages=n_pool)
         else:
-            n_rows = blob.shape[0] if rows is None else rows
-            per_row = (blob.size // blob.shape[0]) * itemsize
-            nbytes = n_rows * (per_row + _QP_BYTES)
-        self._charge(nbytes + _MSG_BYTES, phase=phase)
+            self._cloud_cache = TF.init_cache(cfg, self.max_batch,
+                                              self.max_len,
+                                              layers=self.n_cloud)
+        if self._spec_max > 1:
+            # the edge's draft model: the bank's INT8 copy of the
+            # cloud-suffix weights, over a draft cache in the edge's
+            # layout sharing the edge block table
+            if self.edge_paged:
+                self._draft_cache = TF.init_cache(
+                    cfg, self.max_batch, self.max_len, layers=self.n_cloud,
+                    paged=True, quantized=self.edge_int8,
+                    page_size=self.page_size, num_pages=n_pool)
+            else:
+                self._draft_cache = TF.init_cache(
+                    cfg, self.max_batch, self.max_len, layers=self.n_cloud,
+                    quantized=self.edge_int8)
+        if count:
+            self.stats.cut_switches += 1
 
-    def _account_downlink(self, n_rows: int, *, k: int = 1,
-                          phase: str = "decode") -> None:
-        """The cloud→edge return: the sampled (or corrected) token per
-        live request, plus — when a round verified k > 1 drafts — the
-        accept mask (one bit per draft, byte-packed).  The edge can't
-        start the next round until it arrives, so every round pays this
-        second transfer and its channel RTT.  Counted in
-        ``transmitted_bytes``/``downlink_bytes``, never in the uplink
-        ``decode_bytes`` split."""
-        nbytes = n_rows * (_TOK_BYTES + (_cdiv(k, 8) if k > 1 else 0)) \
-            + _MSG_BYTES
-        self.stats.transmitted_bytes += nbytes
-        self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
-        self.stats.downlink_bytes += nbytes
-        if phase == "decode":
-            self.stats.decode_downlink_bytes += nbytes
+    def _policy_tick(self, n_active: int) -> bool:
+        if self.policy is None:
+            return False
+        d = self.policy.decide(self.telemetry, cut=self.cut,
+                               spec_k=self.spec_k)
+        hold = False
+        if d.spec_k != self.spec_k:
+            if self.policy.k_between_requests_only and n_active > 0:
+                pass                 # defer to the next drained tick
+            elif d.spec_k > 1 and self.spec_k == 1 and n_active > 0:
+                # draft-cache coherence barrier: k=1 rounds run the cheap
+                # serial step and leave the draft cache stale for the
+                # *live* requests, so a raise drains them first — requests
+                # admitted under spec_k > 1 draft-prefill at admission and
+                # every k>1↔k>1 or lowering switch stays immediate
+                hold = True
+            else:
+                self.spec_k = d.spec_k
+                self.stats.spec_k_switches += 1
+        if d.cut != self.cut:
+            if n_active:
+                return True          # re-partition barrier: drain first
+            self._set_cut(d.cut)
+        return hold
+
+    def _round_headroom(self) -> int:
+        return self._spec_max - 1
+
+    # -- Eq.(1)/(2) boundary lattice -----------------------------------------
+    def _quant_boundary(self, h: jax.Array, ranged: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, QuantParams]:
+        """Per-row Eq.(1) framing of a boundary blob.  ``ranged``
+        overrides the tensor the thresholds are computed from (prefill
+        clamps bucket padding out of the min/max).  ``a_bits=None`` is
+        the lossless mode: the blob ships as-is under a unit lattice, so
+        ``dequantize`` is the identity bit for bit."""
+        if self.a_bits is None:
+            unit = QuantParams(scale=jnp.ones((h.shape[0],), jnp.float32),
+                               zero_point=jnp.zeros((h.shape[0],),
+                                                    jnp.float32),
+                               axis=0, bits=8, signed=True)
+            return h.astype(jnp.float32), unit
+        qp = compute_qparams(h if ranged is None else ranged, axis=0,
+                             bits=self.a_bits)
+        return quantize(h, qp), qp
 
     # -- incremental split-cache phases --------------------------------------
     def _edge_prefill_impl(self, blocks, embed, toks, cache, slots, bt_rows,
@@ -909,11 +337,11 @@ class CollaborativeServingEngine(_SlotEngine):
         # one request's range never depends on its neighbours' activations
         # — or on its own bucket padding (pad positions are clamped to a
         # real activation before the min/max reduction; the padded tail
-        # never crosses the wire, see _account)
+        # never crosses the wire, see Transport.account_blob)
         ranged = jnp.where(jnp.arange(s)[None, :, None] <
                            plens[:, None, None], h, h[:, :1])
-        qp = compute_qparams(ranged, axis=0, bits=self.a_bits)
-        return quantize(h, qp), qp, cache
+        blob, qp = self._quant_boundary(h, ranged)
+        return blob, qp, cache
 
     def _cloud_prefill_impl(self, blocks, tail, blob, qp, cache, slots,
                             bt_rows, cur, pos, plens):
@@ -938,33 +366,6 @@ class CollaborativeServingEngine(_SlotEngine):
         pos = pos.at[slots].set(plens)
         return cache, cur, pos
 
-    def _draft_prefill_impl(self, blocks, blob, qp, cache, slots, bt_rows,
-                            plens):
-        """Fill the edge's local draft cache: the INT8 suffix copy runs
-        the same dequantized boundary blob the cloud saw, so the draft
-        model starts every round from the committed prefix state."""
-        cfg = self.cfg
-        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2), locally
-        n = h.shape[0]
-        if self.edge_paged:
-            group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
-            _, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                     cache=group, cache_index=jnp.int32(0),
-                                     qctx=self._edge_qctx,
-                                     block_tables=bt_rows,
-                                     calibrate_kv=self.edge_int8,
-                                     kv_lengths=plens)
-            cache = _paged_prefill_merge(cache, group, slots)
-        else:
-            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud,
-                                  quantized=self.edge_int8)
-            _, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                     cache=small, cache_index=jnp.int32(0),
-                                     qctx=self._edge_qctx)
-            cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
-                                   for k in ("k", "v")})
-        return cache
-
     def _edge_decode_impl(self, blocks, embed, cur, cache, pos, bt):
         self.trace_counts["decode"] += 1
         cfg = self.cfg
@@ -974,8 +375,8 @@ class CollaborativeServingEngine(_SlotEngine):
                                  qctx=self._edge_qctx, block_tables=bt)
         # Eq.(1) per row: stale activations in idle/freed slots must not
         # set the quant range of live requests' deltas
-        qp = compute_qparams(h, axis=0, bits=self.a_bits)
-        return quantize(h, qp), qp, cache                  # [B, 1, D] delta
+        blob, qp = self._quant_boundary(h)
+        return blob, qp, cache                             # [B, 1, D] delta
 
     def _cloud_decode_impl(self, blocks, tail, blob, qp, cache, pos, bt):
         cfg = self.cfg
@@ -987,76 +388,7 @@ class CollaborativeServingEngine(_SlotEngine):
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
 
-    # -- speculative draft/verify round --------------------------------------
-    def _spec_draft_impl(self, edge_blocks, draft_blocks, embed, tail, cur,
-                         e_cache, d_cache, pos, bt):
-        """k sequential local steps on the edge: INT8 prefix → Eq.(1)
-        delta → local INT8 suffix copy → greedy draft token.  One jit'd
-        ``lax.scan``, so a whole round costs one dispatch.  Emits the
-        stacked ``[k, B, D]`` boundary blob with per-(row, position)
-        quant params — bitwise the frames k serial steps would have
-        shipped — and the k draft tokens."""
-        self.trace_counts["spec_draft"] += 1
-        cfg = self.cfg
-        rope = self._rope()
-
-        def step(carry, _):
-            tok, p, ec, dc = carry
-            x = ML.embed(embed, tok[:, None]).astype(cfg.dtype)
-            h, ec = TF.run_blocks(edge_blocks, x, cfg, rope=rope, cache=ec,
-                                  cache_index=p, qctx=self._edge_qctx,
-                                  block_tables=bt)
-            qp = compute_qparams(h, axis=0, bits=self.a_bits)   # per row
-            blob = quantize(h, qp)
-            hq = dequantize(blob, qp).astype(cfg.dtype)  # what the cloud sees
-            y, dc = TF.run_blocks(draft_blocks, hq, cfg, rope=rope, cache=dc,
-                                  cache_index=p, qctx=self._edge_qctx,
-                                  block_tables=bt)
-            logits = TF.lm_head(tail, y)[:, 0]
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            p = jnp.minimum(p + 1, self.max_len - 1)
-            return (nxt, p, ec, dc), (blob[:, 0], qp.scale, qp.zero_point,
-                                      nxt)
-
-        (_, _, e_cache, d_cache), (blobs, scales, zps, drafts) = \
-            jax.lax.scan(step, (cur, pos, e_cache, d_cache), None,
-                         length=self.spec_k)
-        return blobs, scales, zps, drafts, e_cache, d_cache
-
-    def _verify_impl(self, blocks, tail, blobs, scales, zps, drafts, cache,
-                     pos, bt):
-        """One batched multi-token cloud step over all k drafted
-        positions, with longest-prefix acceptance: position i's greedy
-        token ``t_i`` is compared against draft ``d_i``; the round
-        commits ``t_1..t_{j+1}`` where j is the number of leading
-        matches — the token at the first divergence is the *corrected*
-        token, so every round commits at least one exact greedy token.
-        Rejected cache positions are rolled back by the returned
-        per-slot position (a length decrement; stale page entries stay
-        masked by causality until overwritten)."""
-        self.trace_counts["verify"] += 1
-        cfg = self.cfg
-        k = self.spec_k
-        # Eq.(2) per (row, position): same lattice the serial path ships
-        h = (blobs.astype(jnp.float32) - zps[..., None]) * scales[..., None]
-        h = h.transpose(1, 0, 2).astype(cfg.dtype)              # [B, k, D]
-        x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                 cache=cache, cache_index=pos,
-                                 block_tables=bt)
-        logits = TF.lm_head(tail, x)                            # [B, k, V]
-        t = jnp.argmax(logits, -1).astype(jnp.int32)            # [B, k]
-        d = drafts.T                                            # [B, k]
-        ok = (d[:, :k - 1] == t[:, :k - 1]).astype(jnp.int32)
-        n_commit = 1 + jnp.sum(jnp.cumprod(ok, axis=1), axis=1)  # [B]
-        new_cur = jnp.take_along_axis(t, (n_commit - 1)[:, None],
-                                      axis=1)[:, 0]
-        new_pos = jnp.minimum(pos + n_commit, self.max_len - 1)
-        return t, n_commit, new_cur, cache, new_pos
-
     # -- scheduler hooks ----------------------------------------------------
-    def _round_headroom(self) -> int:
-        return self.spec_k - 1
-
     def _admit(self, toks, plens, max_news, slots, cur, pos):
         bt_rows = None
         if self._pool is not None:
@@ -1070,55 +402,68 @@ class CollaborativeServingEngine(_SlotEngine):
         blob, qp, self._edge_cache = self._edge_prefill(
             self.edge_blocks, self.embed, toks, self._edge_cache, slots_j,
             bt_rows, plens_j)
-        self._account(blob, phase="prefill",
-                      row_elems=plens.astype(np.int64) * self.cfg.d_model)
+        self.transport.account_blob(
+            self.stats, blob, phase="prefill",
+            row_elems=plens.astype(np.int64) * self.cfg.d_model)
         self._cloud_cache, cur, pos = self._cloud_prefill(
             self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
             slots_j, bt_rows, cur, pos, plens_j)
-        if self.spec_k > 1:
+        if self._spec_max > 1 and self.spec_k > 1:
+            # requests served at k=1 never draft (and a later raise
+            # drains them first — see _policy_tick), so the draft
+            # prefill is pure overhead unless the engine is drafting now
             self._draft_cache = self._draft_prefill(
                 self.draft_blocks, blob, qp, self._draft_cache, slots_j,
                 bt_rows, plens_j)
-        self._account_downlink(toks.shape[0], phase="prefill")
+        self.transport.account_downlink(self.stats, toks.shape[0],
+                                        phase="prefill")
         return cur, pos
 
     def _decode_all(self, cur, pos, n_active):
         bt = self._pool.table_dev() if self._pool is not None else None
         blob, qp, self._edge_cache = self._edge_decode(
             self.edge_blocks, self.embed, cur, self._edge_cache, pos, bt)
-        self._account(blob, phase="decode", rows=n_active)
+        self.transport.account_blob(self.stats, blob, phase="decode",
+                                    rows=n_active)
         cur, self._cloud_cache, pos = self._cloud_decode(
             self.cloud_blocks, self.tail, blob, qp, self._cloud_cache, pos,
             bt)
-        self._account_downlink(n_active)
+        self.transport.account_downlink(self.stats, n_active)
         return cur, pos
 
     def _round(self, cur, pos, slots):
+        # k=1 is the fully-async serial step (PR 1's path, bit for bit)
+        # whether or not draft machinery exists — drafting costs a full
+        # local model pass per token, so it only runs when k > 1
         if self.spec_k == 1:
             return super()._round(cur, pos, slots)
         k, n_active = self.spec_k, len(slots)
         bt = self._pool.table_dev() if self._pool is not None else None
+        draft_fn, verify_fn = self._spec_fns(k)
         blobs, scales, zps, drafts, self._edge_cache, self._draft_cache = \
-            self._spec_draft(self.edge_blocks, self.draft_blocks, self.embed,
-                             self.tail, cur, self._edge_cache,
-                             self._draft_cache, pos, bt)
+            draft_fn(self.edge_blocks, self.draft_blocks, self.embed,
+                     self.tail, cur, self._edge_cache, self._draft_cache,
+                     pos, bt)
         # one uplink message: k per-row-framed [1, D] deltas + the k-1
         # graded drafts, amortizing the header (and the RTT) over a round
-        self._charge(n_active * (k * (self.cfg.d_model * blobs.dtype.itemsize
-                                      + _QP_BYTES)
-                                 + (k - 1) * _TOK_BYTES) + _MSG_BYTES,
-                     phase="decode")
-        toks, n_commit, cur, self._cloud_cache, pos = self._verify(
+        self.transport.charge(
+            self.stats,
+            n_active * (k * (self.cfg.d_model * blobs.dtype.itemsize
+                             + _QP_BYTES)
+                        + (k - 1) * _TOK_BYTES) + _MSG_BYTES,
+            phase="decode")
+        toks, n_commit, cur, self._cloud_cache, pos = verify_fn(
             self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
             self._cloud_cache, pos, bt)
         # the edge needs the accept counts to schedule the next round, so
         # this sync is part of the protocol, not a host-loop artifact
         counts = np.asarray(n_commit)
-        self._account_downlink(n_active, k=k)
+        self.transport.account_downlink(self.stats, n_active, k=k)
         self.stats.spec_rounds += 1
+        hits = int(np.minimum(counts[slots] - 1, k - 1).sum())
         self.stats.drafted_tokens += (k - 1) * n_active
-        self.stats.draft_hits += int(np.minimum(counts[slots] - 1,
-                                                k - 1).sum())
+        self.stats.draft_hits += hits
+        self.telemetry.observe_round((k - 1) * n_active, hits)
         return cur, pos, toks, counts
 
     def _retire(self, slot):
@@ -1161,14 +506,22 @@ class CollaborativeServingEngine(_SlotEngine):
         (cache-less: re-runs the whole split stack; the seed path)."""
         toks = jnp.asarray(tokens, jnp.int32)
         h = self._edge(self.edge_blocks, self.embed, toks)
-        # Eq.(1): quantize boundary blob for the wire
-        qp = compute_qparams(h, bits=self.a_bits)
-        blob = quantize(h, qp)
+        if self.a_bits is None:
+            blob = h.astype(jnp.float32)
+        else:
+            # Eq.(1): quantize boundary blob for the wire
+            qp = compute_qparams(h, bits=self.a_bits)
+            blob = quantize(h, qp)
+            h = dequantize(blob, qp).astype(self.cfg.dtype)   # Eq.(2)
+        # raw total-bytes accounting (no phase split — the seed path
+        # predates the prefill/decode breakdown and tests pin its totals)
         nbytes = blob.size * blob.dtype.itemsize + _QP_BYTES + _MSG_BYTES
+        t = self.transport.channel.transfer_time(nbytes)
+        self.telemetry.observe_transfer(nbytes, t)
         self.stats.transmitted_bytes += int(nbytes)
-        self.stats.channel_latency_s += self.channel.transfer_time(nbytes)
-        h = dequantize(blob, qp).astype(self.cfg.dtype)       # Eq.(2)
-        return self._cloud(self.cloud_blocks, self.tail, h)
+        self.stats.channel_latency_s += t
+        return self._cloud(self.cloud_blocks, self.tail,
+                           h.astype(self.cfg.dtype))
 
     def generate_recompute(self, prompts: List[np.ndarray], *,
                            max_new_tokens: int = 8) -> List[List[int]]:

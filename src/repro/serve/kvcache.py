@@ -1,0 +1,198 @@
+"""Paged-KV bookkeeping (host side) for the serving engines.
+
+KV cache layouts (see ``transformer.init_cache`` for shapes):
+
+* **dense** — every slot owns ``max_len`` positions up front; the
+  decode einsum streams the whole ``[B, max_len]`` cache each step.
+* **paged** — slots own a block-table row into a shared page pool
+  (``PageAllocator``); HBM is claimed page-by-page at admission and
+  returned at retirement, and reads run the paged flash kernel
+  (``kernels.paged_attention``) whose cost scales with *allocated*
+  pages, not ``max_len``.
+* **paged + INT8** — pages store 1 B/elem with per-slot symmetric
+  scales calibrated from each prompt at prefill (paper Eq.1 applied to
+  serving state); dequantization happens inside the kernel's QK/AV
+  loops so the cache never materializes above 1 B/elem.
+
+The pool's geometry depends only on ``(max_batch, max_len, page_size)``
+— never on the collaborative cut — so a live re-partition
+(``policy.AdaptivePolicy``) keeps the allocator, the block table, and
+every slot's page claim; only the per-layer cache arrays are rebuilt.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PageAllocator:
+    """LIFO free-list allocator over a fixed pool of KV-cache pages.
+
+    Page 0 is never handed out: retired/idle slots keep a zeroed block
+    table row, so their (masked, harmless) decode writes land in page 0
+    instead of corrupting a page that has been re-allocated to a live
+    request.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least one allocatable page"
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._live: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def live(self) -> frozenset:
+        return frozenset(self._live)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: need {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._live:
+                raise ValueError(f"double free of page {p}")
+            self._live.remove(p)
+            self._free.append(p)
+
+
+class _PagedPool:
+    """Block table + allocator for one engine-side page pool.
+
+    Pages for a request are claimed once at admission — enough to cover
+    its padded prompt plus its (known) generation budget, plus any
+    speculative-round headroom — and returned the moment the scheduler
+    retires the slot.  The collaborative engine shares one pool (one
+    block table) across its edge-prefix, cloud-suffix, and draft caches:
+    all three see identical page geometry, so a verify-round rollback is
+    the same length decrement on every cache.
+    """
+
+    def __init__(self, max_batch: int, pages_per_slot: int, num_pages: int,
+                 page_size: int):
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.allocator = PageAllocator(num_pages)
+        self.bt = np.zeros((max_batch, pages_per_slot), np.int32)
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._dev: Optional[jax.Array] = None
+
+    @classmethod
+    def build(cls, max_batch: int, max_len: int, page_size: int,
+              num_pages: Optional[int] = None) -> "_PagedPool":
+        """Standard sizing: worst case ``max_batch`` full-length slots
+        plus the reserved dump page, unless ``num_pages`` undersizes the
+        pool on purpose (admission then backpressures, see
+        ``scheduler._SlotEngine._can_admit``)."""
+        pages_per_slot = _cdiv(max_len, page_size)
+        if num_pages is None:
+            num_pages = max_batch * pages_per_slot + 1
+        return cls(max_batch, pages_per_slot, num_pages, page_size)
+
+    def pages_needed(self, plen: int, max_new: int, padded_len: int) -> int:
+        return _cdiv(max(int(plen) + int(max_new), int(padded_len)),
+                     self.page_size)
+
+    def can_admit(self, shapes: Sequence[Tuple[int, int]],
+                  padded_len: int) -> bool:
+        """Would a prefill group of (plen, max_new) shapes fit the free
+        list right now?"""
+        return sum(self.pages_needed(p, m, padded_len)
+                   for p, m in shapes) <= self.allocator.num_free
+
+    def live_cache_bytes(self, cache: Dict[str, jax.Array]) -> int:
+        """Bytes resident in currently-allocated pages (+ scales) of the
+        paged ``cache`` this pool indexes — the demand-paging footprint,
+        as opposed to the pool's capacity."""
+        per_page = int(np.prod(cache["k_pages"].shape[2:])) \
+            * cache["k_pages"].dtype.itemsize
+        n_layers = cache["k_pages"].shape[0]
+        scales = sum(v.size * v.dtype.itemsize
+                     for k, v in cache.items() if "scale" in k)
+        return 2 * n_layers * len(self.allocator.live) * per_page + scales
+
+    def admit(self, slots: Sequence[int], plens: Sequence[int],
+              max_news: Sequence[int], padded_len: int) -> jax.Array:
+        """Allocate pages for a prefill group; returns the group's block
+        table rows [n, pages_per_slot]."""
+        for s, pl_, mn in zip(slots, plens, max_news):
+            pages = self.allocator.alloc(
+                self.pages_needed(pl_, mn, padded_len))
+            self._slot_pages[int(s)] = pages
+            self.bt[s, :] = 0
+            self.bt[s, :len(pages)] = pages
+        self._dev = None
+        # trim to the pages the padded prompt can touch: the prefill's
+        # q-block read costs O(table width), so handing it the full
+        # pages_per_slot row would make prefill scale with max_len
+        # instead of the bucket (the generation's later pages are only
+        # reachable by decode, which re-reads through table_dev)
+        width = max(1, _cdiv(padded_len, self.page_size))
+        # explicit copy: jax on CPU may zero-copy-alias numpy buffers, and
+        # ``bt`` is mutated on the host while async decode steps are still
+        # in flight — sharing it would race
+        return jnp.array(self.bt[np.asarray(slots)][:, :width], copy=True)
+
+    def retire(self, slot: int) -> None:
+        pages = self._slot_pages.pop(int(slot), None)
+        if pages is not None:
+            self.allocator.free(pages)
+            self.bt[slot, :] = 0
+            self._dev = None
+
+    def table_dev(self) -> jax.Array:
+        """Block table on device, trimmed to the pages actually in use
+        (rounded up to a power of two, so decode retraces are bounded by
+        log2(pages_per_slot) widths, not every occupancy) — the decode
+        read then costs O(allocated pages), not O(max_len).  Cached
+        until the next admit/retire.  Copied, never aliased: the host
+        mutates ``bt`` while earlier async decode steps may still be
+        reading the device buffer."""
+        if self._dev is None:
+            used = max((len(p) for p in self._slot_pages.values()),
+                       default=1)
+            width = 1
+            while width < used:
+                width *= 2
+            width = min(width, self.pages_per_slot)
+            self._dev = jnp.array(self.bt[:, :width], copy=True)
+        return self._dev
+
+
+def _paged_prefill_view(cache: Dict[str, jax.Array], n_layers: int, n: int,
+                        n_kv: int) -> Dict[str, jax.Array]:
+    """Group-local view of a paged cache for one prefill call: the
+    shared page pool plus fresh scale rows for the ``n``-row group (the
+    prefill calibrates them; scatter back with _paged_prefill_merge)."""
+    group = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+    if "k_scale" in cache:
+        group["k_scale"] = jnp.zeros((n_layers, n, n_kv), jnp.float32)
+        group["v_scale"] = jnp.zeros_like(group["k_scale"])
+    return group
+
+
+def _paged_prefill_merge(cache: Dict[str, jax.Array],
+                         group: Dict[str, jax.Array],
+                         slots: jax.Array) -> Dict[str, jax.Array]:
+    cache = dict(cache, k_pages=group["k_pages"], v_pages=group["v_pages"])
+    if "k_scale" in cache:
+        cache["k_scale"] = cache["k_scale"].at[:, slots].set(
+            group["k_scale"])
+        cache["v_scale"] = cache["v_scale"].at[:, slots].set(
+            group["v_scale"])
+    return cache

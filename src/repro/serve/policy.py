@@ -1,0 +1,219 @@
+"""Online re-tuning policy: the control plane of collaborative serving.
+
+The paper's Algorithm 1 picks a partition for *one* environment
+snapshot; JointDNN (arXiv:1801.08618) observes that the optimal
+partition moves with network state, and Shared Mobile-Cloud Inference
+(arXiv:2002.00157) argues the edge/cloud split should adapt at runtime.
+This module closes that loop for the serving engines:
+
+    measurement  ``transport.LinkTelemetry`` — EWMA bandwidth/RTT from
+                 every charged message, EWMA draft acceptance from every
+                 verify round;
+    model        ``costmodel.speculative_round_time`` over the joint
+                 (cut_layer, spec_k) grid via ``autotune.tune_cut_and_k``
+                 — the same predict-then-pick loop as the offline tuner,
+                 re-evaluated against live estimates;
+    actuation    the engine applies a new ``spec_k`` immediately
+                 (between rounds — draft length is a per-round choice)
+                 and a new ``cut_layer`` at the next request-admission
+                 boundary (the scheduler drains occupied slots first,
+                 because split KV caches change layer ownership); the
+                 weights for every candidate cut sit in a prequantized
+                 bank, so the re-partition itself is a pointer swap.
+
+Hysteresis guards both switches: a re-partition costs a drain barrier
+and fresh phase traces, so the predicted win must clear a higher bar
+than a draft-length change before the policy acts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autotune import tune_cut_and_k
+from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel, DeviceModel,
+                                  EDGE_TX2_CLASS)
+from repro.models import transformer as TF
+from repro.serve.transport import LinkTelemetry
+
+__all__ = ["Decision", "AdaptivePolicy", "_CutBank"]
+
+# the param-dict keys ``layers.dense``/``layers.moe_*`` route through
+# ``QuantCtx.weight`` — exactly these leaves carry the INT8 lattice
+_WEIGHT_KEYS = ("w", "wi", "wg", "wo")
+
+
+def _prequantize_blocks(blocks: Any, deploy_qctx) -> Any:
+    """Apply the edge deployment lattice (``QuantCtx.weight``) to every
+    weight leaf **once**.  Runtime contexts then run with
+    ``quantize_weights=False`` — bitwise the same math, minus a per-call
+    re-quantization of static weights (which the k-step draft scan would
+    otherwise pay k times per round).
+
+    Block params are stacked ``[n_layers, ...]`` and the runtime scan
+    quantizes each *layer slice*, so the lattice is applied per layer
+    (vmap over the leading axis) — identical thresholds, bit for bit."""
+    flat, tree = jax.tree_util.tree_flatten_with_path(blocks)
+    out = []
+    for path, leaf in flat:
+        key = next((p.key for p in reversed(path)
+                    if isinstance(p, jax.tree_util.DictKey)), None)
+        if key in _WEIGHT_KEYS and jnp.issubdtype(leaf.dtype, jnp.floating):
+            leaf = jax.vmap(
+                lambda w, k=str(key): deploy_qctx.weight(k, w))(leaf)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
+class _CutBank:
+    """Prequantized multi-cut weight bank — the actuation half of a
+    re-partition.
+
+    The full block stack is fake-quantized onto the edge's INT8
+    deployment lattice **once** (per block, so every candidate cut
+    shares the identical quantized blocks), then each candidate cut gets
+    three slices: the quantized edge prefix, the fp cloud suffix, and
+    the quantized suffix copy the edge drafts with.  Slices materialize
+    lazily on first use and stay cached, so resident memory scales with
+    the cuts actually *served*, not with the candidate grid, and a warm
+    re-partition is a pointer swap — never a requantization.  The
+    runtime ``QuantCtx(quantize_weights=False)`` consumes the lattice
+    weights as-is."""
+
+    def __init__(self, params: Any, cfg: TF.LMConfig, cuts,
+                 deploy_qctx=None) -> None:
+        self._fp = params["blocks"]
+        self._q = self._fp if deploy_qctx is None \
+            else _prequantize_blocks(self._fp, deploy_qctx)
+        self._n_layers = cfg.n_layers
+        self._cuts = tuple(sorted({int(c) for c in cuts}))
+        assert all(0 <= c < cfg.n_layers for c in self._cuts)
+        self._slices: Dict[int, Tuple[Any, Any, Any]] = {}
+
+    @property
+    def cuts(self) -> Tuple[int, ...]:
+        return self._cuts
+
+    def get(self, cut: int) -> Tuple[Any, Any, Any]:
+        """(edge prefix @ INT8 lattice, cloud suffix @ fp, draft suffix
+        copy @ INT8 lattice) for ``cut``."""
+        if cut not in self._cuts:
+            raise KeyError(f"cut {cut} not in weight bank {self.cuts}")
+        if cut not in self._slices:
+            def take(tree, lo, hi):
+                return jax.tree_util.tree_map(lambda v: v[lo:hi], tree)
+            self._slices[cut] = (take(self._q, 0, cut + 1),
+                                 take(self._fp, cut + 1, self._n_layers),
+                                 take(self._q, cut + 1, self._n_layers))
+        return self._slices[cut]
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One output of the control loop: the (cut, k) the engine should
+    run, plus the evidence it was decided on."""
+    cut: int
+    spec_k: int
+    s_per_token: float           # predicted, at the decision's estimates
+    current_s_per_token: float   # prediction for the config it replaces
+    bandwidth_bytes_per_s: float
+    rtt_s: float
+    acceptance: float
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.current_s_per_token / max(self.s_per_token, 1e-12)
+
+
+class AdaptivePolicy:
+    """Re-tunes ``(cut_layer, spec_k)`` for a collaborative engine from
+    live link telemetry.
+
+    ``cuts=None`` restricts the policy to the draft length only — the
+    self-correcting ``spec_k="auto"`` mode: the engine's measured
+    acceptance rate replaces the construction-time prior in
+    ``tune_spec_k`` and k is revised between requests.  With candidate
+    ``cuts`` the policy also re-partitions; every candidate's INT8
+    prefix/suffix weights are prequantized into the engine's cut bank,
+    so acting on a decision never requantizes anything.
+
+    ``decide`` is cheap (a closed-form grid of |cuts| x |ks| roofline
+    evaluations), so the engine calls it every scheduler turn; decisions
+    only *change* when the predicted per-accepted-token win clears
+    ``k_hysteresis`` (draft length — a free switch) or
+    ``cut_hysteresis`` (re-partition — pays a drain barrier and fresh
+    phase traces).
+    """
+
+    def __init__(self, cfg, *, batch: int,
+                 cuts: Optional[Sequence[int]] = None,
+                 ks: Sequence[int] = (1, 2, 4, 8, 16),
+                 edge: DeviceModel = EDGE_TX2_CLASS,
+                 cloud: DeviceModel = CLOUD_TITANXP_CLASS,
+                 fallback_channel: Optional[Channel] = None,
+                 acceptance_prior: float = 0.8,
+                 k_hysteresis: float = 0.02,
+                 cut_hysteresis: float = 0.15,
+                 k_between_requests_only: bool = False):
+        if cuts is not None:
+            assert all(0 <= c < cfg.n_layers - 1 for c in cuts), \
+                "candidate cuts must leave at least one cloud block"
+        self.cfg = cfg
+        self.batch = batch
+        self.cuts = tuple(cuts) if cuts is not None else None
+        self.ks = tuple(ks)
+        self.edge = edge
+        self.cloud = cloud
+        self.fallback_channel = fallback_channel or Channel(
+            bandwidth_bytes_per_s=float("inf"))
+        self.acceptance_prior = acceptance_prior
+        self.k_hysteresis = k_hysteresis
+        self.cut_hysteresis = cut_hysteresis
+        self.k_between_requests_only = k_between_requests_only
+        self.history: List[Decision] = []
+
+    def decide(self, telemetry: LinkTelemetry, *, cut: int,
+               spec_k: int) -> Decision:
+        """One control-loop evaluation: current telemetry → the (cut, k)
+        the engine should be running, with hysteresis against the
+        config it is running."""
+        channel = telemetry.channel(self.fallback_channel)
+        acc = telemetry.acceptance(self.acceptance_prior)
+        cuts = self.cuts if self.cuts is not None else (cut,)
+        best, grid = tune_cut_and_k(
+            self.cfg, batch=self.batch, channel=channel, cuts=cuts,
+            acceptance=acc, edge=self.edge, cloud=self.cloud, ks=self.ks)
+        cur = [p for p in grid if p.cut == cut and p.k == spec_k]
+        cur_s = cur[0].s_per_token if cur else float("inf")
+
+        # hysteresis: keep the running config unless the win is real.  A
+        # re-partition must beat the best *stay-at-this-cut* option by
+        # the higher bar — a k-only win never justifies a drain barrier
+        # when (almost) the same win is available at the current cut
+        stay = min((p for p in grid if p.cut == cut),
+                   key=lambda p: p.s_per_token)
+        new_cut, new_k, new_s = best.cut, best.k, best.s_per_token
+        if new_cut != cut and \
+                new_s >= stay.s_per_token * (1.0 - self.cut_hysteresis):
+            new_cut, new_k, new_s = cut, stay.k, stay.s_per_token
+        if new_cut == cut and new_k != spec_k \
+                and new_s >= cur_s * (1.0 - self.k_hysteresis):
+            new_k, new_s = spec_k, cur_s
+
+        d = Decision(cut=new_cut, spec_k=new_k, s_per_token=new_s,
+                     current_s_per_token=cur_s,
+                     bandwidth_bytes_per_s=channel.bandwidth_bytes_per_s,
+                     rtt_s=channel.rtt_s, acceptance=acc)
+        # log each *distinct* control action once: while the engine
+        # defers a pending switch (drain barrier / between-requests), the
+        # same recommendation recurs every scheduler turn and must not
+        # spam the history
+        if (d.cut != cut or d.spec_k != spec_k) and (
+                not self.history
+                or (self.history[-1].cut, self.history[-1].spec_k)
+                != (d.cut, d.spec_k)):
+            self.history.append(d)
+        return d

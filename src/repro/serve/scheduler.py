@@ -1,0 +1,284 @@
+"""Slot-based continuous-batching scheduler shared by both engines.
+
+Requests queue up, prompts are right-padded to power-of-two *buckets*
+and same-bucket prompts are prefilled together into free cache slots
+(bounding the number of distinct compiled prefill shapes — see
+``trace_counts``), every **round** advances all occupied slots at their
+own positions (vector ``cache_index``) by one or more committed tokens,
+and a finished request frees its slot — and its KV pages — for the next
+queued prompt mid-flight, including *mid-round* when a round commits
+past its budget.  Sampled tokens stay on device for the whole
+generation; the host sees them once, after the last round (a
+speculative engine additionally syncs one small per-round accept-count
+vector, which the edge needs anyway to schedule the next round).
+
+The scheduler also hosts the engine-side half of the online re-tuning
+loop: ``_policy_tick`` runs at the top of every scheduler turn, where a
+policy may switch the speculative draft length immediately (between
+rounds) and request a **re-partition barrier** — admission pauses until
+the occupied slots drain, the cut switch applies at that
+request-admission boundary, and the queue resumes on the new partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as ML
+from repro.models import transformer as TF
+from repro.serve.transport import ServeStats
+
+
+def _bucket_len(plen: int, max_len: int) -> int:
+    """Power-of-two prefill bucket (floor 8, capped at ``max_len``)."""
+    b = 8
+    while b < plen:
+        b *= 2
+    return min(b, max_len)
+
+
+def _jit_phase(fn, donate: Tuple[int, ...] = ()):
+    """``jax.jit`` with the KV-cache argument(s) donated, so the page-pool
+    scatter of every prefill/decode/verify updates the cache *in place*
+    on TPU/GPU instead of doubling resident cache bytes per step.  The
+    engines always consume the returned cache and never touch the donated
+    buffer again, so donation is safe.  XLA:CPU ignores donation and
+    warns per call, so off-accelerator we jit plain."""
+    if donate and jax.default_backend() in ("tpu", "gpu"):
+        return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class _SlotEngine:
+    """Continuous-batching scheduler base class.
+
+    Subclasses implement ``_admit`` (prefill a prompt group into specific
+    slots), ``_decode_all`` (advance every slot one token) and/or
+    ``_round`` (advance every slot by a *variable* number of committed
+    tokens — the speculative draft/verify round), and may hook
+    ``_retire`` (a slot's request finished — e.g. return its KV pages),
+    ``_can_admit`` (admission backpressure), and ``_policy_tick``
+    (online re-tuning).  The scheduler keeps the current token and
+    position of every slot on device; request outputs are transferred to
+    the host once, after the final round.
+
+    The loop is organised around **rounds**: admission commits one token
+    per new slot (the prefill's argmax), and every scheduler turn after
+    that commits ``counts[s]`` tokens per occupied slot, where the
+    non-speculative engines statically commit one (``counts is None`` —
+    no device sync, the loop stays fully async) and a speculative round
+    returns the verify step's per-slot accept counts.  Per-slot
+    accepted-length bookkeeping trims a round that overshoots a
+    request's budget and retires the slot mid-stream ("retire on
+    accept"), so the next queued prompt gets the slot and its pages.
+
+    Admission pads each prompt group to a power-of-two bucket
+    (``_bucket_len``), so the number of distinct prefill trace shapes is
+    bounded by O(log2(max_len) · max_batch) instead of growing with
+    every unique prompt length.  ``trace_counts`` counts actual
+    retraces of the jit'd phase functions; tests pin it.
+    """
+
+    def __init__(self, cfg: TF.LMConfig, *, max_batch: int, max_len: int,
+                 timed: bool = False):
+        self.cfg = dataclasses.replace(cfg, remat=False)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.timed = timed
+        self.stats = ServeStats()
+        self.trace_counts = {"prefill": 0, "decode": 0, "spec_draft": 0,
+                             "verify": 0}
+
+    # -- subclass interface -------------------------------------------------
+    def _admit(self, toks: jax.Array, plens: np.ndarray, max_news: np.ndarray,
+               slots: np.ndarray, cur: jax.Array, pos: jax.Array,
+               ) -> Tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def _decode_all(self, cur: jax.Array, pos: jax.Array,
+                    n_active: int) -> Tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def _round(self, cur: jax.Array, pos: jax.Array, slots: np.ndarray,
+               ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                          Optional[np.ndarray]]:
+        """Advance the occupied ``slots`` by one round.
+
+        Returns ``(cur, pos, tokens, counts)``: ``tokens`` is the
+        ``[max_batch, k]`` device block of tokens the round produced and
+        ``counts`` the per-slot number of *committed* leading tokens —
+        ``None`` means "statically one per slot" (the non-speculative
+        path, which therefore never blocks on the device)."""
+        cur, pos = self._decode_all(cur, pos, len(slots))
+        return cur, pos, cur[:, None], None
+
+    def _round_headroom(self) -> int:
+        """Cache positions a round may write *past* a request's budget
+        (speculative drafting overshoots by up to k-1); admission
+        reserves them so overshoot writes can never alias another
+        request's pages."""
+        return 0
+
+    def _retire(self, slot: int) -> None:
+        """Hook: the request in ``slot`` finished (free paged KV, etc.)."""
+
+    def _can_admit(self, group_shapes: List[Tuple[int, int]], plen: int,
+                   max_new: int, bucket: int) -> bool:
+        """Hook: may this request join the prefill group right now?
+        ``group_shapes`` are the (plen, max_new) pairs already accepted
+        into the group this round.  Paged engines refuse when the page
+        pool can't cover the whole group, backpressuring admission until
+        retirements return pages."""
+        return True
+
+    def _policy_tick(self, n_active: int) -> bool:
+        """Hook: one turn of the online re-tuning control loop, called at
+        the top of every scheduler turn (and therefore between rounds,
+        and with ``n_active == 0`` between requests/generate calls).
+
+        Returns True to **pause admission** this turn — the re-partition
+        barrier: a pending cut-layer switch needs the occupied slots to
+        drain before it can apply (split KV caches change layer
+        ownership), so the engine stops admitting, finishes the live
+        requests, applies the switch at the now-empty admission
+        boundary, and resumes.  Implementations MUST return False when
+        ``n_active == 0`` (apply any pending switch instead), or the
+        scheduler would livelock; the loop asserts this."""
+        return False
+
+    # -- shared helpers -----------------------------------------------------
+    def _rope(self):
+        return ML.rope_table(self.max_len, self.cfg.hd,
+                             base=self.cfg.rope_base, dtype=self.cfg.dtype)
+
+    def _timed(self, phase: str, fn):
+        if not self.timed:
+            return fn()
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        setattr(self.stats, phase,
+                getattr(self.stats, phase) + time.perf_counter() - t0)
+        return out
+
+    # -- scheduler ----------------------------------------------------------
+    def generate(self, prompts: List[np.ndarray], *,
+                 max_new_tokens: int = 16) -> List[List[int]]:
+        """Greedy-decode a list of prompts with continuous batching."""
+        reqs = [Request(uid=i, prompt=np.asarray(p),
+                        max_new_tokens=max_new_tokens)
+                for i, p in enumerate(prompts)]
+        if reqs:
+            self._run(reqs)
+        return [r.out_tokens for r in reqs]
+
+    def _run(self, reqs: List[Request]) -> None:
+        queue = deque(reqs)
+        active: Dict[int, Tuple[Request, int]] = {}  # slot -> (req, n_committed)
+        free = list(range(self.max_batch))
+        cur = jnp.zeros((self.max_batch,), jnp.int32)
+        pos = jnp.zeros((self.max_batch,), jnp.int32)
+        # every admission and every round logs (token block [B, k], takes);
+        # token blocks stay on device until one concat+transfer at the end
+        rounds: List[Tuple[jax.Array, List[Tuple[Request, int, int]]]] = []
+        while queue or active:
+            hold = self._policy_tick(len(active))
+            assert not (hold and not active), \
+                "_policy_tick must not pause admission on a drained engine"
+            # admit queued prompts into free slots, grouping by prefill
+            # bucket so one batched, fixed-shape prefill call covers the
+            # whole group; a paged engine may refuse (pool backpressure)
+            # and a pending re-partition holds admission entirely — the
+            # request then waits for retirements
+            stalled = False
+            while free and queue and not stalled and not hold:
+                bucket = _bucket_len(len(queue[0].prompt), self.max_len)
+                group, slots = [], []
+                shapes: List[Tuple[int, int]] = []
+                while free and queue and _bucket_len(
+                        len(queue[0].prompt), self.max_len) == bucket:
+                    r = queue[0]
+                    assert (len(r.prompt) + r.max_new_tokens
+                            + self._round_headroom()) <= self.max_len, \
+                        "prompt + generation (+ draft headroom) exceeds " \
+                        "cache max_len"
+                    if not self._can_admit(shapes, len(r.prompt),
+                                           r.max_new_tokens, bucket):
+                        stalled = True
+                        break
+                    shapes.append((len(r.prompt), r.max_new_tokens))
+                    group.append(queue.popleft())
+                    slots.append(free.pop(0))
+                if not group:
+                    break
+                toks = np.zeros((len(group), bucket), np.int32)
+                for i, r in enumerate(group):
+                    toks[i, :len(r.prompt)] = r.prompt
+                plens = np.asarray([len(r.prompt) for r in group], np.int32)
+                max_news = np.asarray([r.max_new_tokens for r in group],
+                                      np.int32)
+                slots_a = np.asarray(slots, np.int32)
+                toks_j = jnp.asarray(toks)
+                cur, pos = self._timed(
+                    "prefill_s",
+                    lambda: self._admit(toks_j, plens, max_news, slots_a,
+                                        cur, pos))
+                self.stats.prefill_calls += 1
+                self.stats.prefill_tokens += int(plens.sum())
+                # the prefill's argmax is the group's first committed token
+                rounds.append((cur[:, None],
+                               [(r, s, 1) for r, s in zip(group, slots)]))
+                for r, s in zip(group, slots):
+                    active[s] = (r, 1)
+            if stalled and not active:
+                r = queue[0]
+                raise RuntimeError(
+                    f"KV page pool too small for request uid={r.uid} "
+                    f"(prompt {len(r.prompt)} + {r.max_new_tokens} new "
+                    f"tokens) even with every slot idle")
+            # retire requests whose budget just filled — before the next
+            # round, so no request pays for a round it never reads and
+            # its slot (and KV pages) free one round earlier for the queue
+            for s in [s for s, (r, c) in active.items()
+                      if c >= r.max_new_tokens]:
+                r, _ = active.pop(s)
+                r.done = True
+                self._retire(s)
+                free.append(s)
+            if active:
+                act_slots = np.asarray(sorted(active), np.int32)
+                cur, pos, toks_r, counts = self._timed(
+                    "decode_s",
+                    lambda: self._round(cur, pos, act_slots))
+                takes = []
+                for s in act_slots:
+                    r, c = active[int(s)]
+                    n = 1 if counts is None else int(counts[s])
+                    n = min(n, r.max_new_tokens - c)  # trim budget overshoot
+                    active[int(s)] = (r, c + n)
+                    takes.append((r, int(s), n))
+                rounds.append((toks_r, takes))
+                self.stats.decode_steps += 1
+                self.stats.decode_tokens += sum(n for _, _, n in takes)
+        # single device→host transfer for the whole run
+        all_toks = np.asarray(
+            jnp.concatenate([t for t, _ in rounds], axis=1))
+        col = 0
+        for toks_r, takes in rounds:
+            for r, s, n in takes:
+                r.out_tokens.extend(int(t) for t in all_toks[s, col:col + n])
+            col += toks_r.shape[1]

@@ -1,0 +1,151 @@
+"""Speculative draft/verify machinery of the collaborative engine.
+
+With ``spec_k = k > 1`` the serial decode loop restructures into
+draft/verify rounds that amortize the channel RTT and per-message
+framing over up to k tokens:
+
+1. **Draft (edge, local).**  Starting from the last committed token,
+   the edge runs the *full* split model k times at low precision — its
+   INT8 prefix over the paged INT8 edge cache, then a lightweight INT8
+   copy of the cloud-suffix weights (the same fake-quant lattice the
+   prefix uses) over a local *draft* KV cache that shares the edge
+   block table.  Each step emits the Eq.(1)-quantized boundary delta
+   and greedily drafts the next token from the local suffix.
+2. **Uplink (one transfer).**  The edge ships the concatenated
+   ``[B, k, D]`` quantized boundary blob — each of the k rows framed
+   with its own per-row scale/zero-point so the cloud dequantizes
+   exactly what a serial step would have seen — plus the k-1 draft
+   tokens the cloud must grade (4 B each).  One channel traversal.
+3. **Verify (cloud, one batched step).**  The cloud suffix runs all k
+   positions in a single multi-token cached step (the paged kernel's
+   q-block form, intra-block causal mask) and takes the longest prefix
+   of drafts matching its own greedy tokens: a round commits between 1
+   and k tokens and ``k = 1`` degenerates to the non-speculative step.
+4. **Rollback (both sides, O(1)).**  Rejected positions are *not*
+   erased: both sides keep their per-slot committed length — stale page
+   entries are masked by causality and overwritten in place.
+5. **Downlink (one transfer).**  The cloud returns the accept mask
+   (``ceil(k/8)`` B/row) and the corrected token (4 B/row).
+
+``_SpecDraftMixin`` hosts the jitted implementations; the draft length
+k is a trace constant (scan length / verify q-block width), so each k a
+policy may pick gets its own jitted pair, built on first use and cached
+— an online ``spec_k`` switch after warm-up never recompiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import dequantize
+from repro.models import layers as ML
+from repro.models import transformer as TF
+from repro.serve.kvcache import _paged_prefill_merge, _paged_prefill_view
+from repro.serve.scheduler import _jit_phase
+
+
+class _SpecDraftMixin:
+    """Draft/verify phase implementations, mixed into
+    ``CollaborativeServingEngine`` (which provides cfg, caches, the
+    boundary lattice ``_quant_boundary``, and the scheduler hooks)."""
+
+    def _spec_fns(self, k: int):
+        if k not in self._spec_jits:
+            draft = _jit_phase(partial(self._spec_draft_impl, k),
+                               donate=(5, 6))
+            verify = _jit_phase(partial(self._verify_impl, k), donate=(6,))
+            self._spec_jits[k] = (draft, verify)
+        return self._spec_jits[k]
+
+    def _draft_prefill_impl(self, blocks, blob, qp, cache, slots, bt_rows,
+                            plens):
+        """Fill the edge's local draft cache: the INT8 suffix copy runs
+        the same dequantized boundary blob the cloud saw, so the draft
+        model starts every round from the committed prefix state."""
+        cfg = self.cfg
+        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2), locally
+        n = h.shape[0]
+        if self.edge_paged:
+            group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
+            _, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=group, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx,
+                                     block_tables=bt_rows,
+                                     calibrate_kv=self.edge_int8,
+                                     kv_lengths=plens)
+            cache = _paged_prefill_merge(cache, group, slots)
+        else:
+            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud,
+                                  quantized=self.edge_int8)
+            _, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=small, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx)
+            cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
+                                   for k in ("k", "v")})
+        return cache
+
+    def _spec_draft_impl(self, k, edge_blocks, draft_blocks, embed, tail,
+                         cur, e_cache, d_cache, pos, bt):
+        """k sequential local steps on the edge: INT8 prefix → Eq.(1)
+        delta → local INT8 suffix copy → greedy draft token.  One jit'd
+        ``lax.scan``, so a whole round costs one dispatch.  Emits the
+        stacked ``[k, B, D]`` boundary blob with per-(row, position)
+        quant params — bitwise the frames k serial steps would have
+        shipped — and the k draft tokens."""
+        self.trace_counts["spec_draft"] += 1
+        cfg = self.cfg
+        rope = self._rope()
+
+        def step(carry, _):
+            tok, p, ec, dc = carry
+            x = ML.embed(embed, tok[:, None]).astype(cfg.dtype)
+            h, ec = TF.run_blocks(edge_blocks, x, cfg, rope=rope, cache=ec,
+                                  cache_index=p, qctx=self._edge_qctx,
+                                  block_tables=bt)
+            blob, qp = self._quant_boundary(h)              # per row
+            hq = dequantize(blob, qp).astype(cfg.dtype)  # what the cloud sees
+            y, dc = TF.run_blocks(draft_blocks, hq, cfg, rope=rope, cache=dc,
+                                  cache_index=p, qctx=self._edge_qctx,
+                                  block_tables=bt)
+            logits = TF.lm_head(tail, y)[:, 0]
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            p = jnp.minimum(p + 1, self.max_len - 1)
+            return (nxt, p, ec, dc), (blob[:, 0], qp.scale, qp.zero_point,
+                                      nxt)
+
+        (_, _, e_cache, d_cache), (blobs, scales, zps, drafts) = \
+            jax.lax.scan(step, (cur, pos, e_cache, d_cache), None,
+                         length=k)
+        return blobs, scales, zps, drafts, e_cache, d_cache
+
+    def _verify_impl(self, k, blocks, tail, blobs, scales, zps, drafts,
+                     cache, pos, bt):
+        """One batched multi-token cloud step over all k drafted
+        positions, with longest-prefix acceptance: position i's greedy
+        token ``t_i`` is compared against draft ``d_i``; the round
+        commits ``t_1..t_{j+1}`` where j is the number of leading
+        matches — the token at the first divergence is the *corrected*
+        token, so every round commits at least one exact greedy token.
+        Rejected cache positions are rolled back by the returned
+        per-slot position (a length decrement; stale page entries stay
+        masked by causality until overwritten)."""
+        self.trace_counts["verify"] += 1
+        cfg = self.cfg
+        # Eq.(2) per (row, position): same lattice the serial path ships
+        h = (blobs.astype(jnp.float32) - zps[..., None]) * scales[..., None]
+        h = h.transpose(1, 0, 2).astype(cfg.dtype)              # [B, k, D]
+        x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                 cache=cache, cache_index=pos,
+                                 block_tables=bt)
+        logits = TF.lm_head(tail, x)                            # [B, k, V]
+        t = jnp.argmax(logits, -1).astype(jnp.int32)            # [B, k]
+        d = drafts.T                                            # [B, k]
+        ok = (d[:, :k - 1] == t[:, :k - 1]).astype(jnp.int32)
+        n_commit = 1 + jnp.sum(jnp.cumprod(ok, axis=1), axis=1)  # [B]
+        new_cur = jnp.take_along_axis(t, (n_commit - 1)[:, None],
+                                      axis=1)[:, 0]
+        new_pos = jnp.minimum(pos + n_commit, self.max_len - 1)
+        return t, n_commit, new_cur, cache, new_pos

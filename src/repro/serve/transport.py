@@ -1,0 +1,321 @@
+"""Channel framing, wire accounting, and link telemetry for serving.
+
+Everything that touches the simulated wireless channel lives here:
+
+* the framing constants (``_QP_BYTES``/``_TOK_BYTES``/``_MSG_BYTES``) —
+  canonical values come from ``core.costmodel`` so the engine's
+  accounting and the cost model's round predictions can never drift
+  apart;
+* ``ServeStats`` — the per-phase byte/token/latency counters both
+  engines populate;
+* ``Transport`` — the charge/account methods the collaborative engine
+  calls for every uplink blob and downlink return;
+* ``LinkTelemetry`` — online EWMA estimates of the observed bandwidth,
+  RTT, and draft acceptance, the measurement half of the
+  telemetry → policy → engine control loop (``serve.policy``);
+* ``DriftingChannel`` — a channel whose (bandwidth, rtt) follow a
+  schedule over simulated time, for exercising that loop.
+
+Accounting semantics (shared by every engine):
+
+``transmitted_bytes`` is the total over the wire — prefill and decode
+uplinks plus every cloud→edge downlink, each *message* carrying its
+``_MSG_BYTES`` protocol header on top of the payload (headers, like the
+RTT, are paid per traversal — the quantity a draft/verify round
+amortizes k-fold).  ``decode_bytes`` is the decode-phase *uplink*:
+per-row-quantized boundary deltas plus, in speculative rounds, the 4 B
+draft-token ids the cloud grades.  ``downlink_bytes`` counts the return
+direction — the sampled/corrected token (4 B/row) plus, in speculative
+rounds, the byte-packed accept mask.  Prefill uplinks are charged by
+each request's *true* prompt length — bucket padding is a compile-shape
+artifact and never crosses the wire.  ``decode_tokens`` counts
+**accepted (committed) tokens**.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.costmodel import Channel, MSG_BYTES, QP_BYTES, TOK_BYTES
+
+# wire framing overhead for one quantized blob: f32 scale + f32 zero-point
+_QP_BYTES = int(QP_BYTES)
+# wire bytes for one token id (cloud→edge return / edge→cloud draft)
+_TOK_BYTES = int(TOK_BYTES)
+# per-*message* protocol framing (TCP/IP-class headers + slot ids/round
+# counter): every channel traversal pays it once, which is exactly what a
+# draft/verify round amortizes k-fold alongside the RTT
+_MSG_BYTES = int(MSG_BYTES)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Per-phase serving counters (see the module docstring for the
+    accounting semantics).
+
+    ``drafted_tokens`` / ``draft_hits`` grade the speculative drafts the
+    verify step compared (k-1 per round per live slot), giving
+    ``acceptance_rate``.  ``bytes_per_decode_token`` is uplink bytes per
+    accepted token; ``wire_bytes_per_accepted_token`` adds the decode
+    downlink.  ``spec_k_switches``/``cut_switches`` count online retune
+    events applied by a ``serve.policy`` controller.
+
+    ``prefill_s``/``decode_s`` are wall-clock phase totals, populated
+    when the engine runs with ``timed=True`` (timing blocks on device
+    results, so it is off by default to keep the decode loop fully
+    async)."""
+    prefill_calls: int = 0
+    decode_steps: int = 0
+    transmitted_bytes: int = 0
+    channel_latency_s: float = 0.0
+    # per-phase splits
+    prefill_bytes: int = 0
+    decode_bytes: int = 0
+    decode_bytes_log: List[int] = dataclasses.field(default_factory=list)
+    downlink_bytes: int = 0
+    decode_downlink_bytes: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    # speculative draft/verify rounds
+    spec_rounds: int = 0
+    drafted_tokens: int = 0
+    draft_hits: int = 0
+    # online re-tuning events (serve.policy)
+    spec_k_switches: int = 0
+    cut_switches: int = 0
+
+    def bytes_per_decode_token(self) -> float:
+        """Decode *uplink* bytes per accepted token (PR 1/PR 2 metric)."""
+        return self.decode_bytes / max(self.decode_tokens, 1)
+
+    def wire_bytes_per_accepted_token(self) -> float:
+        """Both directions per accepted token: uplink deltas + drafts
+        and the downlink accept-mask + corrected token."""
+        return (self.decode_bytes + self.decode_downlink_bytes) \
+            / max(self.decode_tokens, 1)
+
+    def acceptance_rate(self) -> float:
+        """Fraction of graded speculative drafts the verify accepted."""
+        return self.draft_hits / max(self.drafted_tokens, 1)
+
+    def report(self) -> Dict[str, float]:
+        return {
+            "prefill_calls": self.prefill_calls,
+            "decode_steps": self.decode_steps,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "accepted_tokens": self.decode_tokens,
+            "transmitted_bytes": self.transmitted_bytes,
+            "prefill_bytes": self.prefill_bytes,
+            "decode_bytes": self.decode_bytes,
+            "downlink_bytes": self.downlink_bytes,
+            "bytes_per_decode_token": self.bytes_per_decode_token(),
+            "wire_bytes_per_accepted_token":
+                self.wire_bytes_per_accepted_token(),
+            "spec_rounds": self.spec_rounds,
+            "drafted_tokens": self.drafted_tokens,
+            "acceptance_rate": self.acceptance_rate(),
+            "spec_k_switches": self.spec_k_switches,
+            "cut_switches": self.cut_switches,
+            "channel_latency_s": self.channel_latency_s,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+        }
+
+
+class LinkTelemetry:
+    """Online estimates of the link and the draft quality, from the
+    traffic the engine sends anyway.
+
+    Every charged message is an ``(nbytes, seconds)`` sample of
+    ``seconds = nbytes / bandwidth + rtt`` — a line in ``nbytes`` — so
+    an exponentially-weighted least-squares fit over the message stream
+    recovers ``1/bandwidth`` (slope) and ``rtt`` (intercept).  Message
+    sizes naturally span two orders of magnitude (prefill blobs vs
+    per-round deltas vs 4 B token returns), which is what makes the
+    regression well-conditioned; when recent traffic degenerates to one
+    size the last well-conditioned estimate is held.  EWMA weighting
+    makes the estimate track channel drift with a ~``1/alpha``-message
+    memory.
+
+    Draft/verify rounds contribute ``(graded, hits)`` samples giving an
+    EWMA draft acceptance rate for ``autotune.tune_spec_k``.
+    """
+
+    def __init__(self, alpha: float = 0.25, min_samples: int = 4):
+        self.alpha = alpha
+        self.min_samples = min_samples
+        self.n_samples = 0
+        self.n_rounds = 0
+        self._mx = self._my = self._mxx = self._mxy = 0.0
+        self._bw: Optional[float] = None
+        self._rtt: Optional[float] = None
+        self._acc: Optional[float] = None
+
+    # -- observations -------------------------------------------------------
+    def observe_transfer(self, nbytes: float, seconds: float) -> None:
+        x, y = float(nbytes), float(seconds)
+        if x <= 0 or seconds < 0:
+            return
+        if self.n_samples == 0:
+            self._mx, self._my = x, y
+            self._mxx, self._mxy = x * x, x * y
+        else:
+            a = self.alpha
+            self._mx += a * (x - self._mx)
+            self._my += a * (y - self._my)
+            self._mxx += a * (x * x - self._mxx)
+            self._mxy += a * (x * y - self._mxy)
+        self.n_samples += 1
+        var = self._mxx - self._mx * self._mx
+        cov = self._mxy - self._mx * self._my
+        # refresh the held estimate only while the fit is well-conditioned
+        if self.n_samples >= self.min_samples \
+                and var > 1e-9 * max(self._mx * self._mx, 1.0) and cov > 0:
+            slope = cov / var                       # seconds per byte
+            self._bw = 1.0 / slope
+            self._rtt = max(0.0, self._my - slope * self._mx)
+
+    def observe_round(self, graded: int, hits: int) -> None:
+        if graded <= 0:
+            return
+        r = hits / graded
+        self._acc = r if self._acc is None \
+            else self._acc + self.alpha * (r - self._acc)
+        self.n_rounds += 1
+
+    # -- estimates ----------------------------------------------------------
+    @property
+    def bandwidth_bytes_per_s(self) -> Optional[float]:
+        return self._bw
+
+    @property
+    def rtt_s(self) -> Optional[float]:
+        return self._rtt
+
+    def acceptance(self, prior: float = 0.8) -> float:
+        return prior if self._acc is None else self._acc
+
+    def channel(self, fallback: Channel) -> Channel:
+        """The estimated channel, or ``fallback`` until the regression
+        has locked on."""
+        if self._bw is None:
+            return fallback
+        return Channel(bandwidth_bytes_per_s=self._bw, rtt_s=self._rtt or 0.0,
+                       name="telemetry")
+
+
+class DriftingChannel:
+    """A channel whose conditions follow a schedule over *simulated*
+    time (the cumulative transfer time it has charged), e.g. ::
+
+        DriftingChannel([(0.0, Channel.from_kbps(2000, rtt_ms=20)),
+                         (5.0, Channel.from_kbps(200, rtt_ms=150)),
+                         (15.0, Channel.from_kbps(2000, rtt_ms=20))])
+
+    Duck-types ``costmodel.Channel`` (``transfer_time``), so engines and
+    telemetry are oblivious; the benchmark uses it to drive the online
+    re-tuning loop through a bandwidth/RTT swing.
+    """
+
+    def __init__(self, schedule: Sequence[Tuple[float, Channel]]):
+        assert schedule and schedule[0][0] == 0.0, \
+            "schedule must start at simulated time 0"
+        self.schedule = list(schedule)
+        self.clock_s = 0.0
+
+    @property
+    def phase(self) -> Channel:
+        cur = self.schedule[0][1]
+        for t0, ch in self.schedule:
+            if self.clock_s >= t0:
+                cur = ch
+        return cur
+
+    @property
+    def name(self) -> str:
+        return f"drift[{self.phase.name}]"
+
+    def transfer_time(self, nbytes: float) -> float:
+        t = self.phase.transfer_time(nbytes)
+        self.clock_s += t
+        return t
+
+
+class Transport:
+    """The collaborative engine's side of the wire: owns the channel and
+    the telemetry, charges every message to a ``ServeStats``.
+
+    ``stats`` is passed per call (not owned) so callers can swap in a
+    fresh ``ServeStats`` between measurement windows without severing
+    the telemetry, which deliberately accumulates across windows — it is
+    an estimate of the *link*, not of any one run."""
+
+    def __init__(self, channel: Optional[Channel] = None,
+                 telemetry: Optional[LinkTelemetry] = None):
+        self.channel = channel or Channel(bandwidth_bytes_per_s=float("inf"))
+        self.telemetry = telemetry or LinkTelemetry()
+
+    def charge(self, stats: ServeStats, nbytes: int, *, phase: str,
+               log: bool = True) -> None:
+        """One uplink message of ``nbytes`` (header included by caller
+        or via the ``account_*`` wrappers)."""
+        t = self.channel.transfer_time(nbytes)
+        self.telemetry.observe_transfer(nbytes, t)
+        stats.transmitted_bytes += int(nbytes)
+        stats.channel_latency_s += t
+        if phase == "prefill":
+            stats.prefill_bytes += int(nbytes)
+        else:
+            stats.decode_bytes += int(nbytes)
+            if log:
+                stats.decode_bytes_log.append(int(nbytes))
+
+    def account_blob(self, stats: ServeStats, blob: jax.Array, *, phase: str,
+                     rows: Optional[int] = None,
+                     row_elems=None) -> None:
+        """Charge the wire for the occupied batch rows of ``blob``.
+
+        The jit'd decode step always computes the full fixed-shape
+        [max_batch, 1, D] delta, but idle slots would never be sent, so
+        the simulated wire carries only the active rows — each framed
+        with its own Eq.(1) scale/zero-point (per-row quantization).
+        ``row_elems`` overrides the per-row payload element count: the
+        prefill blob is bucket-padded on device, but only each request's
+        true prompt activations cross the wire."""
+        itemsize = blob.dtype.itemsize
+        if row_elems is not None:
+            nbytes = int(sum(int(e) * itemsize + _QP_BYTES
+                             for e in row_elems))
+        else:
+            n_rows = blob.shape[0] if rows is None else rows
+            per_row = (blob.size // blob.shape[0]) * itemsize
+            nbytes = n_rows * (per_row + _QP_BYTES)
+        self.charge(stats, nbytes + _MSG_BYTES, phase=phase)
+
+    def account_downlink(self, stats: ServeStats, n_rows: int, *, k: int = 1,
+                         phase: str = "decode") -> None:
+        """The cloud→edge return: the sampled (or corrected) token per
+        live request, plus — when a round verified k > 1 drafts — the
+        accept mask (one bit per draft, byte-packed).  The edge can't
+        start the next round until it arrives, so every round pays this
+        second transfer and its channel RTT.  Counted in
+        ``transmitted_bytes``/``downlink_bytes``, never in the uplink
+        ``decode_bytes`` split."""
+        nbytes = n_rows * (_TOK_BYTES + (_cdiv(k, 8) if k > 1 else 0)) \
+            + _MSG_BYTES
+        t = self.channel.transfer_time(nbytes)
+        self.telemetry.observe_transfer(nbytes, t)
+        stats.transmitted_bytes += nbytes
+        stats.channel_latency_s += t
+        stats.downlink_bytes += nbytes
+        if phase == "decode":
+            stats.decode_downlink_bytes += nbytes
