@@ -29,6 +29,8 @@ from pathlib import Path
 DRIFT_TRACKED = {
     "BENCH_spec_decode.json": ["speculative.2.e2e_speedup_vs_k1"],
     "BENCH_adaptive_serve.json": ["adaptive_vs_worst_fixed_e2e_speedup"],
+    "BENCH_chaos_serve.json": ["outage_availability",
+                               "resilient_vs_naive_sim_speedup"],
 }
 DRIFT_RATIO = 2.0
 
@@ -70,10 +72,10 @@ def check_drift(committed: dict, fresh: dict,
 
 
 def main(quick: bool = False) -> None:
-    from benchmarks import (adaptive_serve, collab_decode, fig3_breakdown,
-                            kernel_bench, optimized_decode, paged_decode,
-                            roofline, spec_decode, table3_partition,
-                            table12_transmission)
+    from benchmarks import (adaptive_serve, chaos_serve, collab_decode,
+                            fig3_breakdown, kernel_bench, optimized_decode,
+                            paged_decode, roofline, spec_decode,
+                            table3_partition, table12_transmission)
 
     # snapshot the committed headline numbers before any section
     # rewrites its BENCH file
@@ -143,6 +145,12 @@ def main(quick: bool = False) -> None:
             lambda r: f"vs_worst_fixed="
                       f"{r['adaptive_vs_worst_fixed_e2e_speedup']:.2f}x;"
                       f"fp_bit_identical={r['fp_bit_identical']}")
+
+    section("chaos_serve", lambda: chaos_serve.run(quick=quick),
+            lambda r: f"availability={r['outage_availability']:.2f};"
+                      f"naive_in_window="
+                      f"{r['naive_tokens_per_s_in_window']:.1f}tok/s;"
+                      f"lossless_bit_identical={r['lossless_bit_identical']}")
 
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")

@@ -80,10 +80,24 @@ def tpu_v5e_pod(n_chips: int = 256) -> DeviceModel:
 
 @dataclasses.dataclass(frozen=True)
 class Channel:
-    """Wireless link between edge and cloud (the paper's environment)."""
+    """Wireless link between edge and cloud (the paper's environment).
+
+    ``loss_rate`` is the per-message loss probability a reliable
+    transport observes (``serve.transport.LinkTelemetry``); with
+    retransmit-until-delivered semantics the *expected* channel time per
+    message is the clean time times ``expected_retx()`` = 1/(1-p), which
+    is how the round-time models below price a lossy link — so the
+    auto-tuner sees that a cut shipping more messages hurts more when
+    messages are being lost."""
     bandwidth_bytes_per_s: float
     rtt_s: float = 0.0
     name: str = ""
+    loss_rate: float = 0.0
+
+    def expected_retx(self) -> float:
+        """Expected transmissions per delivered message, clamped so a
+        (transient) measured loss of ~1 can't predict infinity."""
+        return 1.0 / (1.0 - min(max(self.loss_rate, 0.0), 0.95))
 
     def transfer_time(self, nbytes: float) -> float:
         if nbytes <= 0:
@@ -139,12 +153,15 @@ def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
     a full round trip: the uplink delta plus the cloud→edge return of
     the sampled tokens (``return_bytes``), each a *message* paying the
     ``msg_bytes`` protocol framing the engines charge (``ServeStats``)
-    on top of its payload, and each paying the channel RTT."""
+    on top of its payload, and each paying the channel RTT.  A lossy
+    channel multiplies the whole wire term by the expected retransmit
+    count (``Channel.expected_retx``)."""
     edge_s = edge_flops / edge.peak_ops_int8 + edge.launch_overhead_s
     cloud_s = (cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
                + cloud.launch_overhead_s)
     channel_s = (channel.transfer_time(blob_bytes + msg_bytes)
-                 + channel.transfer_time(return_bytes + msg_bytes))
+                 + channel.transfer_time(return_bytes + msg_bytes)) \
+        * channel.expected_retx()
     return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s)
 
 
@@ -195,7 +212,8 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
     downlink = return_bytes + msg_bytes \
         + (float(-(-k // 8)) * rows if k > 1 else 0.0)
     channel_s = (channel.transfer_time(uplink)
-                 + channel.transfer_time(downlink))
+                 + channel.transfer_time(downlink)) \
+        * channel.expected_retx()
     return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s,
                           tokens=expected_accepted_tokens(k, acceptance))
 

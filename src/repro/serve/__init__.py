@@ -3,19 +3,29 @@ cloud-edge collaborative deployment, as a package of focused layers.
 
     scheduler   slot/bucket/round continuous batching (``_SlotEngine``)
     kvcache     paged INT8 KV bookkeeping (``PageAllocator``)
-    transport   channel framing + wire accounting + link telemetry
+    transport   channel framing + wire accounting + link telemetry,
+                plus the reliable (seq/deadline/retry) transport
+    faults      seeded/scripted channel fault injection
     policy      online (cut_layer, spec_k) re-tuning control plane
     engine      ``ServingEngine`` / ``CollaborativeServingEngine``
+    resilience  ``ResilientCollaborativeEngine`` — edge-only graceful
+                degradation through outages + cloud KV resync
 
 ``repro.serve.engine`` re-exports the whole public surface, so both
 ``from repro.serve import X`` and the historical
-``from repro.serve.engine import X`` work.
+``from repro.serve.engine import X`` work (the resilient engine lives
+one layer above ``engine`` and is exported from the package only).
 """
 from repro.serve.engine import (AdaptivePolicy, CollaborativeServingEngine,
-                                Decision, DriftingChannel, LinkTelemetry,
-                                PageAllocator, Request, ServeStats,
+                                CloudUnreachable, Decision, DriftingChannel,
+                                FaultyChannel, LinkTelemetry, PageAllocator,
+                                ReliableTransport, Request, ServeStats,
                                 ServingEngine, Transport)
+from repro.serve.faults import FaultOutcome
+from repro.serve.resilience import ResilientCollaborativeEngine
 
-__all__ = ["ServingEngine", "CollaborativeServingEngine", "PageAllocator",
-           "ServeStats", "Request", "Transport", "LinkTelemetry",
-           "DriftingChannel", "AdaptivePolicy", "Decision"]
+__all__ = ["ServingEngine", "CollaborativeServingEngine",
+           "ResilientCollaborativeEngine", "PageAllocator", "ServeStats",
+           "Request", "Transport", "ReliableTransport", "CloudUnreachable",
+           "LinkTelemetry", "DriftingChannel", "FaultyChannel",
+           "FaultOutcome", "AdaptivePolicy", "Decision"]

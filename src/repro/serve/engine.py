@@ -53,16 +53,19 @@ from repro.serve.kvcache import (PageAllocator, _cdiv, _PagedPool,
 from repro.serve.policy import AdaptivePolicy, Decision, _CutBank
 from repro.serve.scheduler import (Request, _bucket_len, _jit_phase,
                                    _SlotEngine)
+from repro.serve.faults import FaultyChannel
 from repro.serve.spec import _SpecDraftMixin
 from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
-                                   DriftingChannel, LinkTelemetry, ServeStats,
-                                   Transport)
+                                   CloudUnreachable, DriftingChannel,
+                                   LinkTelemetry, ReliableTransport,
+                                   ServeStats, Transport)
 
 Params = Any
 
 __all__ = ["ServingEngine", "CollaborativeServingEngine", "PageAllocator",
            "ServeStats", "Request", "Transport", "LinkTelemetry",
-           "DriftingChannel", "AdaptivePolicy", "Decision",
+           "DriftingChannel", "AdaptivePolicy", "Decision", "FaultyChannel",
+           "ReliableTransport", "CloudUnreachable",
            "_MSG_BYTES", "_QP_BYTES", "_TOK_BYTES"]
 
 

@@ -157,7 +157,8 @@ class AdaptivePolicy:
                  acceptance_prior: float = 0.8,
                  k_hysteresis: float = 0.02,
                  cut_hysteresis: float = 0.15,
-                 k_between_requests_only: bool = False):
+                 k_between_requests_only: bool = False,
+                 min_dwell: int = 0):
         if cuts is not None:
             assert all(0 <= c < cfg.n_layers - 1 for c in cuts), \
                 "candidate cuts must leave at least one cloud block"
@@ -173,6 +174,13 @@ class AdaptivePolicy:
         self.k_hysteresis = k_hysteresis
         self.cut_hysteresis = cut_hysteresis
         self.k_between_requests_only = k_between_requests_only
+        # flap damping: after recommending a switch, hold the new config
+        # for at least ``min_dwell`` decide() ticks before recommending
+        # another — an oscillating or lossy channel (telemetry swinging
+        # every round) must not thrash cut/spec_k between consecutive
+        # scheduler turns.  0 disables (hysteresis alone).
+        self.min_dwell = int(min_dwell)
+        self._ticks_since_switch: Optional[int] = None
         self.history: List[Decision] = []
 
     def decide(self, telemetry: LinkTelemetry, *, cut: int,
@@ -202,6 +210,19 @@ class AdaptivePolicy:
         if new_cut == cut and new_k != spec_k \
                 and new_s >= cur_s * (1.0 - self.k_hysteresis):
             new_k, new_s = spec_k, cur_s
+
+        # dwell-time floor: a fresh switch recommendation starts a hold
+        # window of ``min_dwell`` ticks during which further changes are
+        # suppressed — back-to-back flapping costs more than any
+        # single-tick prediction can be trusted to win back
+        if self._ticks_since_switch is not None:
+            self._ticks_since_switch += 1
+        if (new_cut, new_k) != (cut, spec_k):
+            if self._ticks_since_switch is not None \
+                    and self._ticks_since_switch <= self.min_dwell:
+                new_cut, new_k, new_s = cut, spec_k, cur_s
+            else:
+                self._ticks_since_switch = 0
 
         d = Decision(cut=new_cut, spec_k=new_k, s_per_token=new_s,
                      current_s_per_token=cur_s,

@@ -102,7 +102,7 @@ class _SlotEngine:
         self.timed = timed
         self.stats = ServeStats()
         self.trace_counts = {"prefill": 0, "decode": 0, "spec_draft": 0,
-                             "verify": 0}
+                             "verify": 0, "edge_only": 0, "resync": 0}
 
     # -- subclass interface -------------------------------------------------
     def _admit(self, toks: jax.Array, plens: np.ndarray, max_news: np.ndarray,
@@ -136,6 +136,13 @@ class _SlotEngine:
 
     def _retire(self, slot: int) -> None:
         """Hook: the request in ``slot`` finished (free paged KV, etc.)."""
+
+    def _after_round(self, n_active: int, committed: int) -> None:
+        """Hook: one decode round just finished, having committed
+        ``committed`` tokens across ``n_active`` slots.  The resilient
+        engine logs (simulated time, committed, cloud state) here — the
+        per-round availability trace the chaos benchmark integrates
+        over its outage window."""
 
     def _can_admit(self, group_shapes: List[Tuple[int, int]], plen: int,
                    max_new: int, bucket: int) -> bool:
@@ -273,7 +280,9 @@ class _SlotEngine:
                     takes.append((r, int(s), n))
                 rounds.append((toks_r, takes))
                 self.stats.decode_steps += 1
-                self.stats.decode_tokens += sum(n for _, _, n in takes)
+                committed = sum(n for _, _, n in takes)
+                self.stats.decode_tokens += committed
+                self._after_round(len(takes), committed)
         # single device→host transfer for the whole run
         all_toks = np.asarray(
             jnp.concatenate([t for t, _ in rounds], axis=1))

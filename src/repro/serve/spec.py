@@ -31,6 +31,17 @@ framing over up to k tokens:
 k is a trace constant (scan length / verify q-block width), so each k a
 policy may pick gets its own jitted pair, built on first use and cached
 — an online ``spec_k`` switch after warm-up never recompiles.
+
+The mixin also hosts the **degradation** phases of the resilient engine
+(``serve.resilience``), which reuse the same draft machinery with the
+verify removed: when the cloud is unreachable, the edge's INT8 suffix
+copy stops *drafting* and starts *serving* — ``_edge_only_step_impl``
+is one full local step (prefix → boundary → suffix → token, zero wire
+bytes), ``_edge_only_prefill_impl`` admits a request entirely on the
+edge, and the two ``_resync_*`` phases replay buffered boundary rows
+through the cloud suffix in one multi-token cached step per slot group
+(the verify's q-block form with the grading removed) to rebuild its
+paged KV on reconnect.
 """
 from __future__ import annotations
 
@@ -120,6 +131,87 @@ class _SpecDraftMixin:
             jax.lax.scan(step, (cur, pos, e_cache, d_cache), None,
                          length=k)
         return blobs, scales, zps, drafts, e_cache, d_cache
+
+    # -- degradation phases (serve.resilience) ------------------------------
+    def _edge_only_step_impl(self, edge_blocks, draft_blocks, embed, tail,
+                             cur, e_cache, d_cache, pos, bt):
+        """One full local step: INT8 prefix → Eq.(1) boundary → INT8
+        suffix copy → greedy token.  Identical math to one unrolled
+        ``_spec_draft_impl`` iteration — which is what makes edge-only
+        tokens bit-identical to cloud tokens in the lossless mode — but
+        also emits the dequantized f32 boundary row, which the resilient
+        engine buffers for the resync replay, and the quantized
+        ``(blob, qp)`` frame so a round that loses its uplink mid-flight
+        can commit the already-computed step without re-running it."""
+        self.trace_counts["edge_only"] += 1
+        cfg = self.cfg
+        rope = self._rope()
+        x = ML.embed(embed, cur[:, None]).astype(cfg.dtype)
+        h, e_cache = TF.run_blocks(edge_blocks, x, cfg, rope=rope,
+                                   cache=e_cache, cache_index=pos,
+                                   qctx=self._edge_qctx, block_tables=bt)
+        blob, qp = self._quant_boundary(h)
+        hq = dequantize(blob, qp)                 # Eq.(2): the cloud's view
+        y, d_cache = TF.run_blocks(draft_blocks, hq.astype(cfg.dtype), cfg,
+                                   rope=rope, cache=d_cache, cache_index=pos,
+                                   qctx=self._edge_qctx, block_tables=bt)
+        logits = TF.lm_head(tail, y)[:, 0]
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        new_pos = jnp.minimum(pos + 1, self.max_len - 1)
+        return blob, qp, hq[:, 0].astype(jnp.float32), nxt, e_cache, \
+            d_cache, new_pos
+
+    def _edge_only_prefill_impl(self, blocks, tail, blob, qp, cache, slots,
+                                bt_rows, plens, cur, pos):
+        """Admit a request with the cloud down: the draft suffix plays
+        the cloud's role — same boundary blob, local lm_head — so the
+        slot starts generating immediately with zero wire bytes."""
+        cfg = self.cfg
+        h = dequantize(blob, qp).astype(cfg.dtype)
+        n = h.shape[0]
+        group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
+        y, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                 cache=group, cache_index=jnp.int32(0),
+                                 qctx=self._edge_qctx, block_tables=bt_rows,
+                                 calibrate_kv=self.edge_int8,
+                                 kv_lengths=plens)
+        cache = _paged_prefill_merge(cache, group, slots)
+        logits = TF.lm_head(tail, y[jnp.arange(n), plens - 1][:, None])[:, 0]
+        cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
+        pos = pos.at[slots].set(plens)
+        return cache, cur, pos
+
+    def _resync_replay_impl(self, blocks, h, cache, pos, bt):
+        """Rebuild the cloud suffix KV for slots that were live before
+        the outage: one multi-token cached step over the ``[B, R, D]``
+        buffered boundary rows at each slot's own resume position
+        (vector ``cache_index`` — the verify's q-block form).  Slots not
+        in the replay group ride along with a zeroed block-table row, so
+        their (masked) writes land in the allocator's dump page."""
+        self.trace_counts["resync"] += 1
+        cfg = self.cfg
+        _, cache = TF.run_blocks(blocks, h.astype(cfg.dtype), cfg,
+                                 rope=self._rope(), cache=cache,
+                                 cache_index=pos, block_tables=bt)
+        return cache
+
+    def _resync_prefill_impl(self, blocks, h, cache, slots, bt_rows, lens):
+        """Rebuild the cloud suffix KV for slots *admitted during* the
+        outage: prefill-style from position 0, calibrating the per-slot
+        INT8 scales the cloud never got to compute (every buffered row
+        is a real token — no bucket padding — so ``lens`` spans them
+        all)."""
+        self.trace_counts["resync"] += 1
+        cfg = self.cfg
+        n = h.shape[0]
+        group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
+        _, group = TF.run_blocks(blocks, h.astype(cfg.dtype), cfg,
+                                 rope=self._rope(), cache=group,
+                                 cache_index=jnp.int32(0),
+                                 block_tables=bt_rows,
+                                 calibrate_kv=self.cloud_int8,
+                                 kv_lengths=lens)
+        return _paged_prefill_merge(cache, group, slots)
 
     def _verify_impl(self, k, blocks, tail, blobs, scales, zps, drafts,
                      cache, pos, bt):

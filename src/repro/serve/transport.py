@@ -34,9 +34,11 @@ artifact and never crosses the wire.  ``decode_tokens`` counts
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.costmodel import Channel, MSG_BYTES, QP_BYTES, TOK_BYTES
 
@@ -69,7 +71,19 @@ class ServeStats:
     ``prefill_s``/``decode_s`` are wall-clock phase totals, populated
     when the engine runs with ``timed=True`` (timing blocks on device
     results, so it is off by default to keep the decode loop fully
-    async)."""
+    async).
+
+    The fault counters are populated by ``ReliableTransport`` and the
+    resilient engine (``serve.resilience``): ``retries`` counts
+    retransmission attempts after a deadline miss or checksum failure,
+    ``timeouts`` counts the deadline misses themselves, ``corrupt_msgs``
+    counts messages whose checksum failed on arrival, ``outage_s`` is
+    simulated time spent with the cloud declared down, and
+    ``edge_only_tokens``/``resyncs`` count tokens committed with zero
+    wire bytes during degradation and the cloud KV rebuilds on
+    reconnect.  Retransmissions' bytes and waiting are charged to
+    ``transmitted_bytes``/``channel_latency_s`` like any other traffic —
+    a lossy link is priced, not hidden."""
     prefill_calls: int = 0
     decode_steps: int = 0
     transmitted_bytes: int = 0
@@ -91,6 +105,13 @@ class ServeStats:
     # online re-tuning events (serve.policy)
     spec_k_switches: int = 0
     cut_switches: int = 0
+    # reliability layer (serve.faults / ReliableTransport / resilience)
+    retries: int = 0
+    timeouts: int = 0
+    corrupt_msgs: int = 0
+    outage_s: float = 0.0
+    edge_only_tokens: int = 0
+    resyncs: int = 0
 
     def bytes_per_decode_token(self) -> float:
         """Decode *uplink* bytes per accepted token (PR 1/PR 2 metric)."""
@@ -128,6 +149,12 @@ class ServeStats:
             "channel_latency_s": self.channel_latency_s,
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,
+            "retries": self.retries,
+            "timeouts": self.timeouts,
+            "corrupt_msgs": self.corrupt_msgs,
+            "outage_s": self.outage_s,
+            "edge_only_tokens": self.edge_only_tokens,
+            "resyncs": self.resyncs,
         }
 
 
@@ -147,8 +174,16 @@ class LinkTelemetry:
     memory.
 
     Draft/verify rounds contribute ``(graded, hits)`` samples giving an
-    EWMA draft acceptance rate for ``autotune.tune_spec_k``.
+    EWMA draft acceptance rate for ``autotune.tune_spec_k``, and every
+    reliable-transport attempt contributes a delivered/lost sample
+    giving an EWMA ``loss_rate`` — the expected-retransmit multiplier
+    ``costmodel`` prices lossy links with.
     """
+
+    # no physical last hop beats ~1 TB/s: a degenerate sample pair can
+    # otherwise drive the fitted slope to ~0 and the bandwidth estimate
+    # to absurdity (see observe_transfer's guard)
+    BW_CEILING_BYTES_PER_S = 1e12
 
     def __init__(self, alpha: float = 0.25, min_samples: int = 4):
         self.alpha = alpha
@@ -159,11 +194,15 @@ class LinkTelemetry:
         self._bw: Optional[float] = None
         self._rtt: Optional[float] = None
         self._acc: Optional[float] = None
+        self._loss: Optional[float] = None
 
     # -- observations -------------------------------------------------------
     def observe_transfer(self, nbytes: float, seconds: float) -> None:
         x, y = float(nbytes), float(seconds)
-        if x <= 0 or seconds < 0:
+        # zero-duration samples carry no line information (the idealized
+        # infinite channel) and, mixed with real samples, can drag the
+        # fitted slope through zero — absurd bandwidth estimates
+        if x <= 0 or y <= 0:
             return
         if self.n_samples == 0:
             self._mx, self._my = x, y
@@ -181,7 +220,7 @@ class LinkTelemetry:
         if self.n_samples >= self.min_samples \
                 and var > 1e-9 * max(self._mx * self._mx, 1.0) and cov > 0:
             slope = cov / var                       # seconds per byte
-            self._bw = 1.0 / slope
+            self._bw = min(1.0 / slope, self.BW_CEILING_BYTES_PER_S)
             self._rtt = max(0.0, self._my - slope * self._mx)
 
     def observe_round(self, graded: int, hits: int) -> None:
@@ -192,6 +231,12 @@ class LinkTelemetry:
             else self._acc + self.alpha * (r - self._acc)
         self.n_rounds += 1
 
+    def observe_delivery(self, delivered: bool) -> None:
+        """One reliable-transport attempt: EWMA of the loss indicator."""
+        x = 0.0 if delivered else 1.0
+        self._loss = x if self._loss is None \
+            else self._loss + self.alpha * (x - self._loss)
+
     # -- estimates ----------------------------------------------------------
     @property
     def bandwidth_bytes_per_s(self) -> Optional[float]:
@@ -201,16 +246,23 @@ class LinkTelemetry:
     def rtt_s(self) -> Optional[float]:
         return self._rtt
 
+    @property
+    def loss_rate(self) -> float:
+        return 0.0 if self._loss is None else self._loss
+
     def acceptance(self, prior: float = 0.8) -> float:
         return prior if self._acc is None else self._acc
 
     def channel(self, fallback: Channel) -> Channel:
         """The estimated channel, or ``fallback`` until the regression
-        has locked on."""
+        has locked on.  Carries the measured ``loss_rate`` either way,
+        so the policy prices retransmissions even before the bandwidth
+        fit converges."""
         if self._bw is None:
-            return fallback
+            return fallback if self._loss is None else dataclasses.replace(
+                fallback, loss_rate=self.loss_rate)
         return Channel(bandwidth_bytes_per_s=self._bw, rtt_s=self._rtt or 0.0,
-                       name="telemetry")
+                       loss_rate=self.loss_rate, name="telemetry")
 
 
 class DriftingChannel:
@@ -264,12 +316,21 @@ class Transport:
         self.channel = channel or Channel(bandwidth_bytes_per_s=float("inf"))
         self.telemetry = telemetry or LinkTelemetry()
 
+    def _transfer(self, stats: ServeStats, nbytes: int) -> float:
+        """Move one message across the channel; returns the seconds the
+        sender spent on it.  ``ReliableTransport`` overrides this with
+        the deadline/retry machinery — every ``charge``/``account_*``
+        path goes through here, so reliability is a transport swap, not
+        an engine change."""
+        t = self.channel.transfer_time(nbytes)
+        self.telemetry.observe_transfer(nbytes, t)
+        return t
+
     def charge(self, stats: ServeStats, nbytes: int, *, phase: str,
                log: bool = True) -> None:
         """One uplink message of ``nbytes`` (header included by caller
         or via the ``account_*`` wrappers)."""
-        t = self.channel.transfer_time(nbytes)
-        self.telemetry.observe_transfer(nbytes, t)
+        t = self._transfer(stats, nbytes)
         stats.transmitted_bytes += int(nbytes)
         stats.channel_latency_s += t
         if phase == "prefill":
@@ -312,10 +373,133 @@ class Transport:
         ``decode_bytes`` split."""
         nbytes = n_rows * (_TOK_BYTES + (_cdiv(k, 8) if k > 1 else 0)) \
             + _MSG_BYTES
-        t = self.channel.transfer_time(nbytes)
-        self.telemetry.observe_transfer(nbytes, t)
+        t = self._transfer(stats, nbytes)
         stats.transmitted_bytes += nbytes
         stats.channel_latency_s += t
         stats.downlink_bytes += nbytes
         if phase == "decode":
             stats.decode_downlink_bytes += nbytes
+
+
+def checksum(payload) -> int:
+    """CRC32 of a boundary blob (or any array/bytes) — the integrity
+    check a receiver runs before acking a message.  The simulator's
+    ``FaultyChannel`` flags corruption explicitly so the hot path never
+    syncs a device blob to hash it, but the mechanism is this one, and
+    the chaos tests exercise it on real payloads."""
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return zlib.crc32(payload) & 0xFFFFFFFF
+    return zlib.crc32(np.ascontiguousarray(payload).tobytes()) & 0xFFFFFFFF
+
+
+class CloudUnreachable(RuntimeError):
+    """Raised by ``ReliableTransport`` when a message exhausts its retry
+    budget — the signal on which a resilient engine declares the cloud
+    down and degrades to edge-only serving."""
+
+
+class ReliableTransport(Transport):
+    """``Transport`` with sequencing, deadlines, and bounded retries.
+
+    Every message gets a sequence number (``seq``) — retransmissions
+    reuse it, so the receiver can both discard duplicates and ack a
+    retransmitted copy of an earlier send (which is what makes a
+    downlink loss after a committed verify harmless: the state advanced,
+    only the ack is re-requested).  A send's deadline comes from the
+    link telemetry — ``margin *`` the EWMA-fit prediction
+    ``nbytes/bandwidth + rtt`` — so the timeout tightens as the
+    estimate locks on; until then a fixed ``fallback_deadline_s``
+    applies.  A miss (silent drop, outage, or an arrival past the
+    deadline) costs the sender the full deadline of waiting, then an
+    exponentially backed-off, seeded-jitter pause before the retransmit;
+    a checksum failure retransmits immediately.  All of it is charged:
+    waiting to ``channel_latency_s``, events to the
+    ``retries``/``timeouts``/``corrupt_msgs`` counters, and every
+    attempt to the telemetry's loss EWMA.  After ``max_retries``
+    retransmits the send raises ``CloudUnreachable``.
+
+    Channels without an ``attempt`` method (the plain deterministic
+    ``Channel``/``DriftingChannel``) degenerate to the base transport —
+    reliability is free when nothing fails."""
+
+    def __init__(self, channel=None, telemetry: Optional[LinkTelemetry] = None,
+                 *, max_retries: int = 3, deadline_margin: float = 3.0,
+                 fallback_deadline_s: float = 0.5, min_deadline_s: float = 0.01,
+                 backoff_base_s: float = 0.02, backoff_max_s: float = 1.0,
+                 seed: int = 0):
+        super().__init__(channel, telemetry)
+        self.max_retries = max_retries
+        self.deadline_margin = deadline_margin
+        self.fallback_deadline_s = fallback_deadline_s
+        self.min_deadline_s = min_deadline_s
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self._rng = np.random.default_rng(seed)
+        self.seq = 0
+
+    def deadline_for(self, nbytes: float) -> float:
+        bw, rtt = self.telemetry.bandwidth_bytes_per_s, self.telemetry.rtt_s
+        if bw is None:
+            return self.fallback_deadline_s
+        return max(self.min_deadline_s,
+                   self.deadline_margin * (nbytes / bw + (rtt or 0.0)))
+
+    def _backoff(self, attempt: int) -> float:
+        base = min(self.backoff_max_s, self.backoff_base_s * (2 ** attempt))
+        return base * (1.0 + float(self._rng.random()))   # full jitter
+
+    def _transfer(self, stats: ServeStats, nbytes: int) -> float:
+        attempt = getattr(self.channel, "attempt", None)
+        if attempt is None:
+            return super()._transfer(stats, nbytes)
+        self.seq += 1
+        deadline = self.deadline_for(nbytes)
+        wait = getattr(self.channel, "wait", lambda s: None)
+        spent = 0.0
+        for i in range(self.max_retries + 1):
+            out = attempt(nbytes)
+            ok = out.delivered and not out.corrupt \
+                and out.seconds <= deadline
+            self.telemetry.observe_delivery(ok)
+            if ok:
+                self.telemetry.observe_transfer(nbytes, out.seconds)
+                return spent + out.seconds
+            if out.delivered and out.corrupt:
+                stats.corrupt_msgs += 1          # caught at arrival: resend
+                spent += out.seconds
+            else:
+                stats.timeouts += 1              # discovered at the deadline
+                pause = max(0.0, deadline - out.seconds) \
+                    if out.delivered else deadline
+                wait(pause)
+                spent += out.seconds + pause
+            if i < self.max_retries:
+                stats.retries += 1
+                back = self._backoff(i)
+                wait(back)
+                spent += back
+        stats.channel_latency_s += spent
+        raise CloudUnreachable(
+            f"seq {self.seq}: {nbytes} B undelivered after "
+            f"{self.max_retries + 1} attempts ({spent:.3f}s)")
+
+    def probe(self, stats: ServeStats) -> Tuple[bool, float]:
+        """One single-attempt heartbeat (header-only message): is the
+        cloud reachable right now?  Returns (ok, seconds consumed) —
+        a miss costs one deadline of waiting, charged to ``stats``."""
+        attempt = getattr(self.channel, "attempt", None)
+        if attempt is None:
+            return True, 0.0
+        deadline = self.deadline_for(_MSG_BYTES)
+        out = attempt(_MSG_BYTES)
+        ok = out.delivered and not out.corrupt and out.seconds <= deadline
+        self.telemetry.observe_delivery(ok)
+        spent = out.seconds
+        if not ok:
+            pause = deadline if not out.delivered \
+                else max(0.0, deadline - out.seconds)
+            getattr(self.channel, "wait", lambda s: None)(pause)
+            spent += pause
+            stats.timeouts += 1
+        stats.channel_latency_s += spent
+        return ok, spent
