@@ -1,0 +1,218 @@
+"""Overload serving benchmark: goodput under 2x KV pool oversubscription.
+
+Two engines serve identical mixed-priority request waves through a
+shared simulated channel clock, with the KV page pool sized at **half**
+the worst-case demand of a full batch (4 slots x ~49 positions wants
+~20 usable pages; the pool has 10):
+
+* ``naive`` — the plain ``CollaborativeServingEngine``: admission
+  reserves worst-case ``prompt + max_new`` pages up front, so the pool
+  fits ~1 full-budget request at a time and the best-effort wave
+  head-of-line blocks the late-arriving priority requests past their
+  deadlines;
+* ``robust`` — the same engine with ``demand_paged=True`` (admission
+  reserves only the padded prompt, pages grow as positions are actually
+  written, and ``PoolExhausted`` preempts the lowest-priority /
+  most-remaining victim with replay-based resume) and
+  ``admission="deadline"`` (requests predicted to finish past their
+  deadline are shed instead of poisoning the pool).
+
+Traffic per offered-load level: a staggered wave of best-effort
+requests (no deadline — they are the overload) plus a burst of
+priority-1 requests whose deadline is calibrated from a measured
+lone-request service time.  **Goodput** counts only tokens of requests
+that met their deadline (deadline-free requests always count), per
+simulated second.  Headlines for the drift guard:
+
+* ``goodput_vs_naive`` — robust over naive goodput at the heaviest
+  load (the ISSUE's acceptance bar is >= 1.5x);
+* ``priority_ontime_frac`` — fraction of priority requests the robust
+  engine finished on time at the heaviest load.
+
+Also reported per engine/load: p50/p99 queue wait (``admit_s -
+arrival_s``), preemptions, sheds, deadline misses, and a lossless
+preemption bit-identity check (an ``a_bits=None`` run under a pool
+squeeze must match the unpressured stream bit for bit).
+
+    PYTHONPATH=src python -m benchmarks.overload_serve
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.costmodel import Channel
+from repro.models.transformer import LMConfig, init_lm
+from repro.serve import (CollaborativeServingEngine, FaultyChannel,
+                         PressureSchedule, Request)
+
+OUT = Path("BENCH_overload_serve.json")
+
+CFG = LMConfig(name="overload-bench-lm", n_layers=3, d_model=32, n_heads=4,
+               n_kv=2, d_ff=64, vocab=64, max_seq=64, remat=False)
+CUT = 1
+PAGE = 8
+# 2x oversubscription: 4 slots x (9 prompt + 40 new) wants ~20 usable
+# pages; the pool has 10 (plus the reserved dump page)
+POOL = dict(page_size=PAGE, max_batch=4, max_len=64, num_pages=11)
+BASE = Channel.from_kbps(500, rtt_ms=10)
+PLEN = 9
+BE_NEW = 40              # best-effort generation budget
+PRI_NEW = 20             # priority generation budget
+DEADLINE_MARGIN = 3.0    # deadline = arrival + margin * lone service time
+
+
+def _mk_prompts(n, seed):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, CFG.vocab, PLEN).astype(np.int32)
+            for _ in range(n)]
+
+
+def _traffic(n_be, n_pri, gap, deadline_s):
+    """A best-effort wave arriving every ``gap`` seconds, then a burst of
+    priority requests landing mid-wave with calibrated deadlines."""
+    prompts = _mk_prompts(n_be + n_pri, seed=7)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=BE_NEW,
+                    priority=0, arrival_s=i * gap) for i in range(n_be)]
+    t0 = 2 * gap  # the burst lands while the wave still holds the pool
+    reqs += [Request(uid=100 + i, prompt=prompts[n_be + i],
+                     max_new_tokens=PRI_NEW, priority=1,
+                     arrival_s=t0 + i * gap,
+                     deadline_s=t0 + i * gap + deadline_s)
+             for i in range(n_pri)]
+    return reqs
+
+
+def _calibrate_deadline(params) -> float:
+    """Measure one priority-shaped request served alone on an idle
+    engine; deadlines are a fixed multiple of that — tight enough that
+    head-of-line blocking misses them, loose enough that preempting
+    into service meets them."""
+    fch = FaultyChannel(BASE, seed=0)
+    eng = CollaborativeServingEngine(params, CFG, cut_layer=CUT,
+                                     channel=fch, **POOL)
+    eng.generate(_mk_prompts(1, seed=1), max_new_tokens=PRI_NEW)
+    return DEADLINE_MARGIN * float(fch.clock_s)
+
+
+def _serve(eng, fch, reqs):
+    t_wall = time.perf_counter()
+    eng.generate_requests(reqs)
+    wall = time.perf_counter() - t_wall
+    sim = float(fch.clock_s)
+    ontime = [r for r in reqs if not r.shed
+              and (r.deadline_s is None
+                   or (r.finish_s is not None
+                       and r.finish_s <= r.deadline_s))]
+    good = sum(len(r.out_tokens) for r in ontime)
+    waits = [r.admit_s - r.arrival_s for r in reqs if r.admit_s is not None]
+    pri = [r for r in reqs if r.priority > 0]
+    s = eng.stats
+    return {
+        "wall_s": wall,
+        "sim_s": sim,
+        "total_tokens": sum(len(r.out_tokens) for r in reqs),
+        "goodput_tokens": good,
+        "goodput_tok_per_s": good / max(sim, 1e-9),
+        "priority_ontime_frac": sum(
+            1 for r in pri
+            if r.finish_s is not None and r.finish_s <= r.deadline_s)
+        / max(len(pri), 1),
+        "p50_queue_wait_s": float(np.percentile(waits, 50)) if waits else 0.0,
+        "p99_queue_wait_s": float(np.percentile(waits, 99)) if waits else 0.0,
+        "preemptions": s.preemptions,
+        "shed": s.shed,
+        "deadline_misses": s.deadline_misses,
+        "queue_wait_s": s.queue_wait_s,
+        "stall_wait_s": s.stall_wait_s,
+    }
+
+
+def _lossless_preemption_identity(params, print_fn) -> bool:
+    """An ``a_bits=None`` run whose pool is squeezed to zero free pages
+    mid-flight must preempt at least once and still emit the exact
+    unpressured streams — preemption/resume is invisible in the output."""
+    fp = dict(a_bits=None, edge_int8=False, cloud_int8=False,
+              page_size=PAGE, max_batch=2, max_len=64)
+    prompts = _mk_prompts(3, seed=23)
+    ref = CollaborativeServingEngine(
+        params, CFG, cut_layer=CUT, channel=FaultyChannel(BASE, seed=0),
+        **fp).generate(prompts, max_new_tokens=12)
+    eng = CollaborativeServingEngine(
+        params, CFG, cut_layer=CUT, channel=FaultyChannel(BASE, seed=0),
+        demand_paged=True, pressure=PressureSchedule([(0.02, 0.25, 0)]),
+        **fp)
+    got = eng.generate(prompts, max_new_tokens=12)
+    ok = got == ref and eng.stats.preemptions >= 1
+    print_fn(f"lossless preemption bit-identity: {ok} "
+             f"(preemptions={eng.stats.preemptions})")
+    return ok
+
+
+def run(print_fn=print, quick: bool = False) -> dict:
+    # offered load = arrival rate of the identical wave; the pool
+    # geometry (2x oversubscribed) is fixed across the sweep
+    loads = [("heavy", 0.05)] if quick else [
+        ("light", 0.30), ("medium", 0.15), ("heavy", 0.05)]
+    n_be, n_pri = (6, 2) if quick else (8, 3)
+    params = init_lm(jax.random.PRNGKey(0), CFG)
+    deadline_s = _calibrate_deadline(params)
+    print_fn(f"pool {POOL['num_pages']} pages @ {PAGE} "
+             f"(~2x oversubscribed), {n_be} best-effort x {BE_NEW} tok + "
+             f"{n_pri} priority x {PRI_NEW} tok, "
+             f"deadline={deadline_s:.2f}s on {BASE.name}")
+
+    sweep = {}
+    for load, gap in loads:
+        sweep[load] = {"arrival_gap_s": gap}
+        for name, kw in [("naive", {}),
+                         ("robust", dict(demand_paged=True,
+                                         admission="deadline"))]:
+            fch = FaultyChannel(BASE, seed=0)
+            eng = CollaborativeServingEngine(
+                params, CFG, cut_layer=CUT, channel=fch, **POOL, **kw)
+            r = _serve(eng, fch, _traffic(n_be, n_pri, gap, deadline_s))
+            sweep[load][name] = r
+            print_fn(f"{load:>6}/{name:>6}: goodput "
+                     f"{r['goodput_tok_per_s']:6.1f} tok/s "
+                     f"({r['goodput_tokens']}/{r['total_tokens']} tok in "
+                     f"{r['sim_s']:.2f}s)  p99 wait "
+                     f"{r['p99_queue_wait_s']:.2f}s  "
+                     f"preempt={r['preemptions']} shed={r['shed']} "
+                     f"miss={r['deadline_misses']}")
+
+    heavy = sweep["heavy"]
+    goodput_ratio = heavy["robust"]["goodput_tok_per_s"] \
+        / max(heavy["naive"]["goodput_tok_per_s"], 1e-9)
+    ok = _lossless_preemption_identity(params, print_fn)
+    print_fn(f"goodput robust vs naive at heavy load: {goodput_ratio:.2f}x "
+             f"(priority on-time: robust "
+             f"{heavy['robust']['priority_ontime_frac']:.2f} vs naive "
+             f"{heavy['naive']['priority_ontime_frac']:.2f})")
+
+    result = {
+        "config": {"model": CFG.name, "cut": CUT, **POOL,
+                   "channel": BASE.name, "prompt_len": PLEN,
+                   "best_effort": {"n": n_be, "max_new": BE_NEW},
+                   "priority": {"n": n_pri, "max_new": PRI_NEW,
+                                "deadline_s": deadline_s},
+                   "quick": quick},
+        "sweep": sweep,
+        "goodput_vs_naive": goodput_ratio,
+        "priority_ontime_frac": heavy["robust"]["priority_ontime_frac"],
+        "naive_priority_ontime_frac": heavy["naive"]["priority_ontime_frac"],
+        "p99_queue_wait_s": heavy["robust"]["p99_queue_wait_s"],
+        "naive_p99_queue_wait_s": heavy["naive"]["p99_queue_wait_s"],
+        "lossless_preemption_bit_identical": ok,
+    }
+    OUT.write_text(json.dumps(result, indent=1))
+    print_fn(f"-> {OUT}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,8 @@ DRIFT_TRACKED = {
     "BENCH_adaptive_serve.json": ["adaptive_vs_worst_fixed_e2e_speedup"],
     "BENCH_chaos_serve.json": ["outage_availability",
                                "resilient_vs_naive_sim_speedup"],
+    "BENCH_overload_serve.json": ["goodput_vs_naive",
+                                  "priority_ontime_frac"],
 }
 DRIFT_RATIO = 2.0
 
@@ -74,8 +76,9 @@ def check_drift(committed: dict, fresh: dict,
 def main(quick: bool = False) -> None:
     from benchmarks import (adaptive_serve, chaos_serve, collab_decode,
                             fig3_breakdown, kernel_bench, optimized_decode,
-                            paged_decode, roofline, spec_decode,
-                            table3_partition, table12_transmission)
+                            overload_serve, paged_decode, roofline,
+                            spec_decode, table3_partition,
+                            table12_transmission)
 
     # snapshot the committed headline numbers before any section
     # rewrites its BENCH file
@@ -151,6 +154,13 @@ def main(quick: bool = False) -> None:
                       f"naive_in_window="
                       f"{r['naive_tokens_per_s_in_window']:.1f}tok/s;"
                       f"lossless_bit_identical={r['lossless_bit_identical']}")
+
+    section("overload_serve", lambda: overload_serve.run(quick=quick),
+            lambda r: f"goodput_vs_naive={r['goodput_vs_naive']:.2f}x;"
+                      f"priority_ontime={r['priority_ontime_frac']:.2f};"
+                      f"p99_wait={r['p99_queue_wait_s']:.2f}s;"
+                      f"lossless_bit_identical="
+                      f"{r['lossless_preemption_bit_identical']}")
 
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")

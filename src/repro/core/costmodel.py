@@ -23,7 +23,7 @@ __all__ = ["DeviceModel", "Channel", "Profile", "PhaseBreakdown",
            "MSG_BYTES", "QP_BYTES", "TOK_BYTES",
            "layer_time", "subgraph_time", "tpu_v5e_pod",
            "collab_decode_step_time", "speculative_round_time",
-           "expected_accepted_tokens"]
+           "expected_accepted_tokens", "predict_finish_time"]
 
 # Canonical wire-framing constants, shared with the serving engines'
 # accounting (``serve.transport``) so model predictions and measured
@@ -216,6 +216,29 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
         * channel.expected_retx()
     return PhaseBreakdown(decode_s=edge_s + cloud_s, channel_s=channel_s,
                           tokens=expected_accepted_tokens(k, acceptance))
+
+
+def predict_finish_time(round: PhaseBreakdown, *, now: float, max_new: int,
+                        queue_tokens: float = 0.0, slots: int = 1,
+                        prefill_s: float = 0.0) -> float:
+    """Predicted absolute completion time of a request entering service.
+
+    ``round`` is one decode round's predicted cost (its ``tokens`` field
+    is the expected accepted tokens per round, so a lossy channel's
+    expected retransmissions — baked into ``channel_s`` by
+    ``speculative_round_time`` via ``Channel.expected_retx`` — and a low
+    draft acceptance both stretch the prediction).  ``queue_tokens`` is
+    the budget the engine still owes work admitted *ahead* of this
+    request; under continuous batching those tokens drain across
+    ``slots`` parallel slots at the same per-round cadence, which is the
+    queue-depth term of deadline-aware admission (``serve.policy.
+    DeadlineAdmission``): a doomed request is one whose predicted finish
+    already overshoots its deadline *before* it is granted a slot."""
+    toks = max(float(round.tokens), 1e-9)
+    rounds_own = -(-float(max_new) // toks)            # ceil
+    rounds_queued = max(0.0, float(queue_tokens)) / (max(int(slots), 1)
+                                                     * toks)
+    return now + prefill_s + (rounds_own + rounds_queued) * round.total_s
 
 
 def layer_time(node: Node, dev: DeviceModel, *, precision: str,

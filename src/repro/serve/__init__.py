@@ -6,7 +6,10 @@ cloud-edge collaborative deployment, as a package of focused layers.
     transport   channel framing + wire accounting + link telemetry,
                 plus the reliable (seq/deadline/retry) transport
     faults      seeded/scripted channel fault injection
-    policy      online (cut_layer, spec_k) re-tuning control plane
+    policy      online (cut_layer, spec_k) re-tuning control plane +
+                deadline-aware admission prediction
+    overload    demand paging / preemption / deadline-shedding hooks
+                (``_OverloadMixin``)
     engine      ``ServingEngine`` / ``CollaborativeServingEngine``
     resilience  ``ResilientCollaborativeEngine`` — edge-only graceful
                 degradation through outages + cloud KV resync
@@ -17,15 +20,17 @@ cloud-edge collaborative deployment, as a package of focused layers.
 one layer above ``engine`` and is exported from the package only).
 """
 from repro.serve.engine import (AdaptivePolicy, CollaborativeServingEngine,
-                                CloudUnreachable, Decision, DriftingChannel,
-                                FaultyChannel, LinkTelemetry, PageAllocator,
-                                ReliableTransport, Request, ServeStats,
-                                ServingEngine, Transport)
+                                CloudUnreachable, DeadlineAdmission,
+                                Decision, DriftingChannel, FaultyChannel,
+                                LinkTelemetry, PageAllocator, PoolExhausted,
+                                PressureSchedule, ReliableTransport, Request,
+                                ServeStats, ServingEngine, Transport)
 from repro.serve.faults import FaultOutcome
 from repro.serve.resilience import ResilientCollaborativeEngine
 
 __all__ = ["ServingEngine", "CollaborativeServingEngine",
-           "ResilientCollaborativeEngine", "PageAllocator", "ServeStats",
-           "Request", "Transport", "ReliableTransport", "CloudUnreachable",
-           "LinkTelemetry", "DriftingChannel", "FaultyChannel",
-           "FaultOutcome", "AdaptivePolicy", "Decision"]
+           "ResilientCollaborativeEngine", "PageAllocator", "PoolExhausted",
+           "ServeStats", "Request", "Transport", "ReliableTransport",
+           "CloudUnreachable", "LinkTelemetry", "DriftingChannel",
+           "FaultyChannel", "FaultOutcome", "PressureSchedule",
+           "AdaptivePolicy", "DeadlineAdmission", "Decision"]

@@ -12,7 +12,10 @@ the deployment side of the paper, composed from the ``serve`` package:
 * ``serve.spec``      — the speculative draft/verify round machinery
   (wire protocol documented there);
 * ``serve.policy``    — the telemetry → costmodel/autotune → engine
-  re-tuning policy (``AdaptivePolicy``).
+  re-tuning policy (``AdaptivePolicy``) + ``DeadlineAdmission``;
+* ``serve.overload``  — the overload-robustness hooks (demand paging,
+  pressure faults, deadline admission) mixed in ahead of the
+  scheduler's defaults.
 
 ``CollaborativeServingEngine`` is the paper's mode rebuilt around
 *incremental decode*: the INT8 edge prefix (first ``cut_layer+1``
@@ -48,12 +51,15 @@ from repro.models import transformer as TF
 # re-export shims: the pre-split monolith lived at repro.serve.engine and
 # external code imports these names from here
 from repro.serve.cloud import ServingEngine
-from repro.serve.kvcache import (PageAllocator, _cdiv, _PagedPool,
-                                 _paged_prefill_merge, _paged_prefill_view)
-from repro.serve.policy import AdaptivePolicy, Decision, _CutBank
+from repro.serve.kvcache import (PageAllocator, PoolExhausted, _cdiv,
+                                 _PagedPool, _paged_prefill_merge,
+                                 _paged_prefill_view)
+from repro.serve.policy import (AdaptivePolicy, DeadlineAdmission, Decision,
+                                _CutBank)
 from repro.serve.scheduler import (Request, _bucket_len, _jit_phase,
                                    _SlotEngine)
-from repro.serve.faults import FaultyChannel
+from repro.serve.faults import FaultyChannel, PressureSchedule
+from repro.serve.overload import _OverloadMixin
 from repro.serve.spec import _SpecDraftMixin
 from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
                                    CloudUnreachable, DriftingChannel,
@@ -63,13 +69,15 @@ from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
 Params = Any
 
 __all__ = ["ServingEngine", "CollaborativeServingEngine", "PageAllocator",
-           "ServeStats", "Request", "Transport", "LinkTelemetry",
-           "DriftingChannel", "AdaptivePolicy", "Decision", "FaultyChannel",
-           "ReliableTransport", "CloudUnreachable",
+           "PoolExhausted", "ServeStats", "Request", "Transport",
+           "LinkTelemetry", "DriftingChannel", "AdaptivePolicy",
+           "DeadlineAdmission", "Decision", "FaultyChannel",
+           "PressureSchedule", "ReliableTransport", "CloudUnreachable",
            "_MSG_BYTES", "_QP_BYTES", "_TOK_BYTES"]
 
 
-class CollaborativeServingEngine(_SpecDraftMixin, _SlotEngine):
+class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
+                                 _SlotEngine):
     """Paper mode with incremental decode over split, shared-table paged
     INT8 KV caches (see the module docstring), plus the online tuning
     loop.
@@ -104,6 +112,9 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SlotEngine):
                  spec_k: Union[int, str] = 1, spec_acceptance: float = 0.8,
                  policy: Union[AdaptivePolicy, str, None] = None,
                  candidate_cuts: Optional[Tuple[int, ...]] = None,
+                 demand_paged: bool = False,
+                 pressure: Optional[PressureSchedule] = None,
+                 admission: Union[DeadlineAdmission, str, None] = None,
                  timed: bool = False):
         assert 0 <= cut_layer < cfg.n_layers, \
             f"cut_layer {cut_layer} outside [0, {cfg.n_layers})"
@@ -177,6 +188,12 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SlotEngine):
         if edge_paged or cloud_paged:
             self._pool = _PagedPool.build(max_batch, max_len, page_size,
                                           num_pages)
+        # overload robustness (demand paging / pressure faults / deadline
+        # admission) — hook implementations live in serve.overload
+        self._init_overload(cfg, demand_paged=demand_paged,
+                            pressure=pressure, admission=admission,
+                            max_batch=max_batch, initial_ch=initial_ch,
+                            spec_acceptance=spec_acceptance, a_bits=a_bits)
         # every cut the engine may ever serve goes into the bank up front
         # (policy candidates, or explicit candidate_cuts for externally
         # scripted re-partitions)
@@ -395,10 +412,8 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SlotEngine):
     def _admit(self, toks, plens, max_news, slots, cur, pos):
         bt_rows = None
         if self._pool is not None:
-            # reserve the speculative overshoot so a round's rejected-tail
-            # writes can never spill into another request's pages
             bt_rows = self._pool.admit(slots, plens,
-                                       max_news + self._round_headroom(),
+                                       self._admit_reserve(max_news),
                                        toks.shape[1])
         slots_j = jnp.asarray(slots)
         plens_j = jnp.asarray(plens)
@@ -476,10 +491,9 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SlotEngine):
     def _can_admit(self, group_shapes, plen, max_new, bucket):
         if self._pool is None:
             return True
-        head = self._round_headroom()
-        shapes = [(p, m + head) for p, m in group_shapes]
-        return self._pool.can_admit(shapes + [(plen, max_new + head)],
-                                    bucket)
+        shapes = [(p, int(self._admit_reserve(np.int64(m))))
+                  for p, m in group_shapes + [(plen, max_new)]]
+        return self._pool.can_admit(shapes, bucket)
 
     def edge_cache_bytes(self, *, live_only: bool = False) -> int:
         """Edge KV footprint; ``live_only`` counts allocated pages only."""

@@ -30,7 +30,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["FaultOutcome", "FaultyChannel"]
+__all__ = ["FaultOutcome", "FaultyChannel", "PressureSchedule"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,3 +164,59 @@ class FaultyChannel:
                 self.wait(self.rto_s)
                 total += self.rto_s
             # corrupt: checksum fails on arrival; retransmit immediately
+
+
+class PressureSchedule:
+    """Scripted *resource*-fault injection: the page-pool analogue of
+    ``FaultyChannel``'s outage windows.
+
+    ``windows`` is a list of ``(t0_s, t1_s, free_pages)`` intervals on
+    the simulated clock; inside a window the schedule squeezes a
+    ``kvcache.PageAllocator``'s free list down to at most ``free_pages``
+    by holding pages itself (a co-tenant claiming HBM, a cgroup limit
+    tightening), and past the window it gives them back.  ``apply`` is
+    called by the scheduler at the top of every turn with the current
+    simulated time, so the squeeze lands at deterministic points of the
+    round structure — overload chaos tests are seeded and replayable,
+    exactly like the outage tests.  The squeeze can only take pages that
+    are actually free (live requests are never corrupted); if admission
+    races it to the free list, the schedule simply grabs the remainder
+    as retirements return pages.
+    """
+
+    def __init__(self, windows: Sequence[Tuple[float, float, int]]):
+        self.windows = [(float(a), float(b), int(n)) for a, b, n in windows]
+        assert all(b > a and n >= 0 for a, b, n in self.windows), \
+            self.windows
+        self._held: List[int] = []
+
+    def target_free(self, t: float) -> Optional[int]:
+        """The free-list ceiling at simulated time ``t`` (None = no
+        pressure; overlapping windows compose to the tightest)."""
+        targets = [n for a, b, n in self.windows if a <= t < b]
+        return min(targets) if targets else None
+
+    def next_change(self, t: float) -> Optional[float]:
+        """The next window edge after ``t`` — how long a stalled
+        scheduler must wait before the free list can look different."""
+        edges = [e for a, b, _ in self.windows for e in (a, b) if e > t]
+        return min(edges) if edges else None
+
+    @property
+    def held_pages(self) -> int:
+        return len(self._held)
+
+    def apply(self, allocator, t: float) -> None:
+        """Move the allocator's free list toward the time-``t`` target:
+        grab free pages down to the ceiling, or return held pages when
+        the window has passed (all of them) or the ceiling rose."""
+        target = self.target_free(t)
+        if target is None:
+            if self._held:
+                allocator.free(self._held)
+                self._held = []
+            return
+        while allocator.num_free > target:
+            self._held.extend(allocator.alloc(1))
+        while allocator.num_free < target and self._held:
+            allocator.free([self._held.pop()])

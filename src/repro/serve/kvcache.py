@@ -32,6 +32,15 @@ def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
+class PoolExhausted(RuntimeError):
+    """Typed "no free pages" failure of ``PageAllocator.alloc``.
+
+    Subclasses ``RuntimeError`` so pre-existing callers that catch the
+    bare exhaustion keep working; the overload-robust scheduler catches
+    it specifically — a mid-round exhaustion triggers victim preemption
+    (``scheduler._SlotEngine``), never a crash."""
+
+
 class PageAllocator:
     """LIFO free-list allocator over a fixed pool of KV-cache pages.
 
@@ -57,7 +66,7 @@ class PageAllocator:
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
-            raise RuntimeError(
+            raise PoolExhausted(
                 f"KV page pool exhausted: need {n}, have {len(self._free)}")
         pages = [self._free.pop() for _ in range(n)]
         self._live.update(pages)
@@ -66,7 +75,9 @@ class PageAllocator:
     def free(self, pages: Sequence[int]) -> None:
         for p in pages:
             if p not in self._live:
-                raise ValueError(f"double free of page {p}")
+                raise ValueError(
+                    f"free of page {p} which is not live (double free, or "
+                    f"a page this allocator never handed out)")
             self._live.remove(p)
             self._free.append(p)
 
@@ -74,13 +85,16 @@ class PageAllocator:
 class _PagedPool:
     """Block table + allocator for one engine-side page pool.
 
-    Pages for a request are claimed once at admission — enough to cover
-    its padded prompt plus its (known) generation budget, plus any
-    speculative-round headroom — and returned the moment the scheduler
-    retires the slot.  The collaborative engine shares one pool (one
-    block table) across its edge-prefix, cloud-suffix, and draft caches:
-    all three see identical page geometry, so a verify-round rollback is
-    the same length decrement on every cache.
+    Pages for a request are claimed at admission — by default enough to
+    cover its padded prompt plus its (known) generation budget, plus any
+    speculative-round headroom; a demand-paged engine reserves only the
+    padded prompt plus one round of headroom and grows the claim with
+    ``ensure`` as the sequence crosses page boundaries — and returned
+    the moment the scheduler retires (or preempts) the slot.  The
+    collaborative engine shares one pool (one block table) across its
+    edge-prefix, cloud-suffix, and draft caches: all three see identical
+    page geometry, so a verify-round rollback is the same length
+    decrement on every cache.
     """
 
     def __init__(self, max_batch: int, pages_per_slot: int, num_pages: int,
@@ -96,12 +110,28 @@ class _PagedPool:
     def build(cls, max_batch: int, max_len: int, page_size: int,
               num_pages: Optional[int] = None) -> "_PagedPool":
         """Standard sizing: worst case ``max_batch`` full-length slots
-        plus the reserved dump page, unless ``num_pages`` undersizes the
-        pool on purpose (admission then backpressures, see
-        ``scheduler._SlotEngine._can_admit``)."""
+        plus the reserved dump page.
+
+        **Intentional-undersizing contract**: an explicit ``num_pages``
+        below the standard sizing bounds *concurrency*, never
+        feasibility — admission backpressures until retirements return
+        pages (``scheduler._SlotEngine._can_admit``), and a demand-paged
+        engine additionally oversubscribes the pool against worst-case
+        budgets and preempts on ``PoolExhausted``.  A pool that cannot
+        hold even one max-length slot (``pages_per_slot``) plus the
+        reserved dump page can never serve anything and is rejected
+        here, at construction, instead of stalling the first request."""
         pages_per_slot = _cdiv(max_len, page_size)
         if num_pages is None:
             num_pages = max_batch * pages_per_slot + 1
+        elif num_pages < pages_per_slot + 1:
+            raise ValueError(
+                f"KV page pool num_pages={num_pages} can never admit a "
+                f"single max-length slot: max_len={max_len} at "
+                f"page_size={page_size} needs pages_per_slot="
+                f"{pages_per_slot} plus the reserved dump page "
+                f"(>= {pages_per_slot + 1}); undersizing below "
+                f"{max_batch * pages_per_slot + 1} only bounds concurrency")
         return cls(max_batch, pages_per_slot, num_pages, page_size)
 
     def pages_needed(self, plen: int, max_new: int, padded_len: int) -> int:
@@ -147,6 +177,27 @@ class _PagedPool:
         # ``bt`` is mutated on the host while async decode steps are still
         # in flight — sharing it would race
         return jnp.array(self.bt[np.asarray(slots)][:, :width], copy=True)
+
+    def pages_held(self, slot: int) -> int:
+        return len(self._slot_pages.get(int(slot), ()))
+
+    def ensure(self, slot: int, n_positions: int) -> bool:
+        """Demand-grow ``slot``'s page claim to cover ``n_positions``
+        cache positions; returns True iff new pages were allocated.
+        Raises ``PoolExhausted`` — with the slot's existing claim and
+        block-table row untouched — when the free list cannot cover the
+        growth, which is the scheduler's cue to preempt a victim."""
+        s = int(slot)
+        pages = self._slot_pages.get(s)
+        assert pages is not None, f"slot {s} holds no pages"
+        need = _cdiv(int(n_positions), self.page_size)
+        if need <= len(pages):
+            return False
+        grown = self.allocator.alloc(need - len(pages))
+        self.bt[s, len(pages):need] = grown
+        pages.extend(grown)
+        self._dev = None
+        return True
 
     def retire(self, slot: int) -> None:
         pages = self._slot_pages.pop(int(slot), None)

@@ -35,11 +35,12 @@ import jax.numpy as jnp
 
 from repro.core.autotune import tune_cut_and_k
 from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel, DeviceModel,
-                                  EDGE_TX2_CLASS)
+                                  EDGE_TX2_CLASS, predict_finish_time)
 from repro.models import transformer as TF
-from repro.serve.transport import LinkTelemetry
+from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
+                                   LinkTelemetry)
 
-__all__ = ["Decision", "AdaptivePolicy", "_CutBank"]
+__all__ = ["Decision", "AdaptivePolicy", "DeadlineAdmission", "_CutBank"]
 
 # the param-dict keys ``layers.dense``/``layers.moe_*`` route through
 # ``QuantCtx.weight`` — exactly these leaves carry the INT8 lattice
@@ -238,3 +239,62 @@ class AdaptivePolicy:
                 != (d.cut, d.spec_k)):
             self.history.append(d)
         return d
+
+
+class DeadlineAdmission:
+    """Deadline-aware admission control: the paper's predict-then-pick
+    discipline (Algorithm 1) applied to the *admit/shed* decision.
+
+    Where ``AdaptivePolicy`` asks "which (cut, k) is fastest right
+    now?", this asks "can this request finish by its deadline at the
+    engine's current (cut, k), behind the work already admitted?" — and
+    if the answer is no *at admission time, with the request first in
+    line for a slot*, the request can only finish even later, so the
+    engine sheds it instead of letting it occupy pages and head-of-line
+    block traffic that could still meet its deadline.
+
+    The prediction reuses the same telemetry-fed roofline the tuner
+    runs: ``tune_cut_and_k`` evaluated at the single live (cut, k) point
+    gives the per-round phase breakdown — expected retransmissions on a
+    lossy link are already priced into its channel term — and
+    ``costmodel.predict_finish_time`` folds in the request's own budget,
+    the queue's owed tokens, and the prefill round-trip.  ``margin``
+    inflates the predicted service time (>1 = conservative: shed
+    earlier, protect admitted work; <1 = optimistic)."""
+
+    def __init__(self, cfg, *, batch: int,
+                 fallback_channel: Optional[Channel] = None,
+                 edge: DeviceModel = EDGE_TX2_CLASS,
+                 cloud: DeviceModel = CLOUD_TITANXP_CLASS,
+                 acceptance_prior: float = 0.8, margin: float = 1.1,
+                 blob_itemsize: int = 1):
+        self.cfg = cfg
+        self.batch = batch
+        self.fallback_channel = fallback_channel or Channel(
+            bandwidth_bytes_per_s=float("inf"))
+        self.edge = edge
+        self.cloud = cloud
+        self.acceptance_prior = acceptance_prior
+        self.margin = float(margin)
+        self.blob_itemsize = int(blob_itemsize)
+
+    def predict_finish(self, telemetry: LinkTelemetry, *, now: float,
+                       cut: int, spec_k: int, plen: int, max_new: int,
+                       slots: int, queue_tokens: float = 0.0) -> float:
+        """Predicted absolute finish time of a request admitted now."""
+        channel = telemetry.channel(self.fallback_channel)
+        acc = telemetry.acceptance(self.acceptance_prior)
+        best, _ = tune_cut_and_k(
+            self.cfg, batch=self.batch, channel=channel, cuts=(cut,),
+            ks=(spec_k,), acceptance=acc, edge=self.edge, cloud=self.cloud)
+        # the admission prefill's wire cost: the [plen, D] boundary blob
+        # up, the first token down, both paying expected retransmissions
+        prefill_s = (channel.transfer_time(
+            plen * self.cfg.d_model * self.blob_itemsize
+            + _QP_BYTES + _MSG_BYTES)
+            + channel.transfer_time(_TOK_BYTES + _MSG_BYTES)) \
+            * channel.expected_retx()
+        t = predict_finish_time(best.breakdown, now=now, max_new=max_new,
+                                queue_tokens=queue_tokens, slots=slots,
+                                prefill_s=prefill_s)
+        return now + (t - now) * self.margin

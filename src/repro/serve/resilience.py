@@ -200,9 +200,13 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
                     jnp.asarray(posb), jnp.array(bt[:, :w], copy=True))
 
     # -- scheduler hooks, fault-aware ---------------------------------------
+    def _round_width(self):
+        # edge-only rounds are serial regardless of spec_k
+        return 1 if (self.cloud_down or self.spec_k == 1) else self.spec_k
+
     def _admit(self, toks, plens, max_news, slots, cur, pos):
         bt_rows = self._pool.admit(slots, plens,
-                                   max_news + self._round_headroom(),
+                                   self._admit_reserve(max_news),
                                    toks.shape[1])
         slots_j, plens_j = jnp.asarray(slots), jnp.asarray(plens)
         blob, qp, self._edge_cache = self._edge_prefill(

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -32,6 +31,7 @@ import numpy as np
 
 from repro.models import layers as ML
 from repro.models import transformer as TF
+from repro.serve.kvcache import PoolExhausted
 from repro.serve.transport import ServeStats
 
 
@@ -62,6 +62,28 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # -- overload-robust serving (all optional; defaults = legacy batch) --
+    priority: int = 0             # higher admits first / preempts last
+    deadline_s: Optional[float] = None   # absolute, on the simulated clock
+    arrival_s: float = 0.0        # when the request becomes admissible
+    shed: bool = False            # refused by deadline-aware admission
+    preemptions: int = 0          # times this request was suspended
+    admit_s: Optional[float] = None      # first admission time
+    finish_s: Optional[float] = None     # retirement time
+    # scheduler internals
+    _seq: int = dataclasses.field(default=0, repr=False)
+    _enq_s: float = dataclasses.field(default=0.0, repr=False)
+    _parked: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)  # committed tokens across a preemption
+
+
+def _remove_is(lst: List, item) -> None:
+    """Remove by identity (dataclass ``==`` compares field values, and
+    two requests may legitimately carry identical fields)."""
+    for i, x in enumerate(lst):
+        if x is item:
+            del lst[i]
+            return
 
 
 class _SlotEngine:
@@ -168,6 +190,61 @@ class _SlotEngine:
         scheduler would livelock; the loop asserts this."""
         return False
 
+    def _tick_resources(self) -> None:
+        """Hook: top of every scheduler turn, before admission — a
+        pressure-injecting engine applies its ``faults.PressureSchedule``
+        to the page allocator here, at the current simulated time."""
+
+    def _now(self) -> float:
+        """Hook: current simulated time.  Clockless engines serve one
+        batch at t=0; clocked engines mirror their channel's
+        ``clock_s``."""
+        return 0.0
+
+    def _wait(self, seconds: float) -> bool:
+        """Hook: advance the simulated clock by ``seconds`` (a scheduler
+        stall or an inter-arrival gap), charging ``stats.stall_wait_s``.
+        Returns False when the engine has no clock to advance — the
+        scheduler then falls back to batch semantics (every queued
+        request is treated as already arrived)."""
+        return seconds <= 0
+
+    def _on_stall(self) -> bool:
+        """Hook: the engine is drained but admission still can't fit the
+        next request.  Return True after waiting out a *transient* cause
+        (e.g. a ``PressureSchedule`` window squeezing the pool) — the
+        scheduler retries; False means the stall is permanent and the
+        scheduler raises."""
+        return False
+
+    def _round_width(self) -> int:
+        """Cache positions one round may write per slot (the speculative
+        draft length); demand paging grows each slot's claim to cover
+        them before the round runs."""
+        return 1
+
+    def _ensure_slot(self, slot: int, horizon: int) -> None:
+        """Hook: grow ``slot``'s page claim to cover ``horizon`` cache
+        positions before the coming round writes them; raises
+        ``kvcache.PoolExhausted`` when the pool can't (the scheduler
+        preempts a victim and retries).  Default: worst-case reservation
+        at admission — nothing to grow."""
+
+    def _preempt(self, slot: int) -> None:
+        """Hook: ``slot`` is being suspended mid-flight — release its KV
+        pages, but keep the request resumable (the scheduler has already
+        parked its committed tokens and re-queues it)."""
+        self._retire(slot)
+
+    def _admission_policy(self, req: Request, *, now: float,
+                          queue_tokens: float) -> bool:
+        """Hook: may ``req`` be admitted at all?  False sheds it — a
+        deadline-aware engine predicts the finish time from the live
+        cost model and refuses requests that are already doomed.
+        ``queue_tokens`` is the generation budget still owed to work
+        admitted ahead of it."""
+        return True
+
     # -- shared helpers -----------------------------------------------------
     def _rope(self):
         return ML.rope_table(self.max_len, self.cfg.hd,
@@ -182,6 +259,23 @@ class _SlotEngine:
                 getattr(self.stats, phase) + time.perf_counter() - t0)
         return out
 
+    @staticmethod
+    def _eff_prompt(r: Request) -> np.ndarray:
+        """The token row a (re-)admission prefills: the prompt — extended
+        for a preempted request with all but the last committed token.
+        This is multi-token cached replay: the batched prefill rebuilds
+        the suspended slot's KV in one call, and its argmax re-derives
+        the last committed token, so resume recomputes no committed
+        position one-by-one."""
+        if r._parked is None or len(r._parked) == 0:
+            return np.asarray(r.prompt, np.int32)
+        return np.concatenate([np.asarray(r.prompt, np.int32),
+                               r._parked[:-1]])
+
+    def _eff_plen(self, r: Request) -> int:
+        return len(r.prompt) + (0 if r._parked is None
+                                else max(0, len(r._parked) - 1))
+
     # -- scheduler ----------------------------------------------------------
     def generate(self, prompts: List[np.ndarray], *,
                  max_new_tokens: int = 16) -> List[List[int]]:
@@ -193,8 +287,21 @@ class _SlotEngine:
             self._run(reqs)
         return [r.out_tokens for r in reqs]
 
+    def generate_requests(self, reqs: List[Request]) -> List[List[int]]:
+        """Run caller-built ``Request``s — priorities, deadlines,
+        arrival times — through the scheduler; returns their token
+        streams in input order.  A shed request comes back empty with
+        ``r.shed`` set; completion metadata lands on ``admit_s`` /
+        ``finish_s`` / ``preemptions``."""
+        if reqs:
+            self._run(reqs)
+        return [r.out_tokens for r in reqs]
+
     def _run(self, reqs: List[Request]) -> None:
-        queue = deque(reqs)
+        for i, r in enumerate(reqs):
+            r._seq = i
+            r._enq_s = float(r.arrival_s)
+        queue: List[Request] = list(reqs)
         active: Dict[int, Tuple[Request, int]] = {}  # slot -> (req, n_committed)
         free = list(range(self.max_batch))
         cur = jnp.zeros((self.max_batch,), jnp.int32)
@@ -202,42 +309,103 @@ class _SlotEngine:
         # every admission and every round logs (token block [B, k], takes);
         # token blocks stay on device until one concat+transfer at the end
         rounds: List[Tuple[jax.Array, List[Tuple[Request, int, int]]]] = []
+
+        def parked_tokens(r: Request) -> np.ndarray:
+            """Pull ``r``'s committed tokens off the logged round blocks
+            — the one host sync a preemption costs."""
+            chunks = [np.asarray(t[s, :n])
+                      for t, takes in rounds
+                      for rr, s, n in takes if rr is r and n > 0]
+            return (np.concatenate(chunks).astype(np.int32) if chunks
+                    else np.zeros((0,), np.int32))
+
+        def preempt(slot: int) -> None:
+            r, _c = active.pop(slot)
+            r._parked = parked_tokens(r)
+            r._enq_s = self._now()
+            r.preemptions += 1
+            self.stats.preemptions += 1
+            self._preempt(slot)
+            free.append(slot)
+            queue.append(r)
+
         while queue or active:
+            self._tick_resources()
             hold = self._policy_tick(len(active))
             assert not (hold and not active), \
                 "_policy_tick must not pause admission on a drained engine"
-            # admit queued prompts into free slots, grouping by prefill
+            now = self._now()
+            elig = sorted((r for r in queue if r.arrival_s <= now + 1e-12),
+                          key=lambda r: (-r.priority, r._seq))
+            if not elig and queue and not active and not hold:
+                # nothing has arrived yet: advance the clock to the next
+                # arrival, or — on a clockless engine — fall back to
+                # batch semantics (everything queued is already here)
+                nxt = min(r.arrival_s for r in queue)
+                if self._wait(nxt - now):
+                    continue
+                elig = sorted(queue, key=lambda r: (-r.priority, r._seq))
+            # admit eligible prompts into free slots, grouping by prefill
             # bucket so one batched, fixed-shape prefill call covers the
             # whole group; a paged engine may refuse (pool backpressure)
             # and a pending re-partition holds admission entirely — the
             # request then waits for retirements
             stalled = False
-            while free and queue and not stalled and not hold:
-                bucket = _bucket_len(len(queue[0].prompt), self.max_len)
-                group, slots = [], []
+            stall_req: Optional[Request] = None
+            while free and elig and not stalled and not hold:
+                bucket = _bucket_len(self._eff_plen(elig[0]), self.max_len)
+                group: List[Request] = []
+                rows: List[np.ndarray] = []
+                slots: List[int] = []
                 shapes: List[Tuple[int, int]] = []
-                while free and queue and _bucket_len(
-                        len(queue[0].prompt), self.max_len) == bucket:
-                    r = queue[0]
-                    assert (len(r.prompt) + r.max_new_tokens
+                while free and elig and _bucket_len(
+                        self._eff_plen(elig[0]), self.max_len) == bucket:
+                    r = elig[0]
+                    row = self._eff_prompt(r)
+                    eff_new = (r.max_new_tokens if r._parked is None
+                               else r.max_new_tokens - len(r._parked) + 1)
+                    assert (len(row) + eff_new
                             + self._round_headroom()) <= self.max_len, \
                         "prompt + generation (+ draft headroom) exceeds " \
                         "cache max_len"
-                    if not self._can_admit(shapes, len(r.prompt),
-                                           r.max_new_tokens, bucket):
+                    if r._parked is None and r.deadline_s is not None:
+                        # budget owed to work that will actually run
+                        # ahead of this request: equal-or-higher
+                        # priority only — lower-priority slots are
+                        # preemptable, so they don't gate its finish
+                        owed = (sum(rr.max_new_tokens - cc
+                                    for rr, cc in active.values()
+                                    if rr.priority >= r.priority)
+                                + sum(m for _, m in shapes))
+                        if not self._admission_policy(
+                                r, now=now, queue_tokens=float(owed)):
+                            # predicted to finish past its deadline even
+                            # if admitted this instant: shed it instead
+                            # of letting it poison the pool
+                            r.shed = True
+                            r.done = True
+                            self.stats.shed += 1
+                            elig.pop(0)
+                            _remove_is(queue, r)
+                            continue
+                    if not self._can_admit(shapes, len(row), eff_new,
+                                           bucket):
                         stalled = True
+                        stall_req = r
                         break
-                    shapes.append((len(r.prompt), r.max_new_tokens))
-                    group.append(queue.popleft())
+                    shapes.append((len(row), eff_new))
+                    group.append(r)
+                    rows.append(row)
+                    elig.pop(0)
+                    _remove_is(queue, r)
                     slots.append(free.pop(0))
                 if not group:
                     break
                 toks = np.zeros((len(group), bucket), np.int32)
-                for i, r in enumerate(group):
-                    toks[i, :len(r.prompt)] = r.prompt
-                plens = np.asarray([len(r.prompt) for r in group], np.int32)
-                max_news = np.asarray([r.max_new_tokens for r in group],
-                                      np.int32)
+                for i, row in enumerate(rows):
+                    toks[i, :len(row)] = row
+                plens = np.asarray([len(row) for row in rows], np.int32)
+                max_news = np.asarray([m for _, m in shapes], np.int32)
                 slots_a = np.asarray(slots, np.int32)
                 toks_j = jnp.asarray(toks)
                 cur, pos = self._timed(
@@ -246,17 +414,44 @@ class _SlotEngine:
                                         cur, pos))
                 self.stats.prefill_calls += 1
                 self.stats.prefill_tokens += int(plens.sum())
-                # the prefill's argmax is the group's first committed token
-                rounds.append((cur[:, None],
-                               [(r, s, 1) for r, s in zip(group, slots)]))
+                resumes = [(s, r) for r, s in zip(group, slots)
+                           if r._parked is not None]
+                if resumes:
+                    # the replay prefill re-derives the last committed
+                    # token; pin the stream to the parked value so resume
+                    # can never diverge (INT8 recalibration over the
+                    # longer prefix may legitimately flip the argmax —
+                    # lossless mode is bitwise identical either way,
+                    # which the preemption property tests pin)
+                    rs = jnp.asarray([s for s, _ in resumes], jnp.int32)
+                    lasts = jnp.asarray([int(r._parked[-1])
+                                         for _, r in resumes], jnp.int32)
+                    cur = cur.at[rs].set(lasts)
+                # a fresh request's first committed token is the prefill
+                # argmax; a resumed request's tokens are already logged
+                # in its pre-preemption rounds
+                fresh = [(r, s, 1) for r, s in zip(group, slots)
+                         if r._parked is None]
+                if fresh:
+                    rounds.append((cur[:, None], fresh))
                 for r, s in zip(group, slots):
-                    active[s] = (r, 1)
+                    active[s] = (r, 1 if r._parked is None
+                                 else len(r._parked))
+                    if r.admit_s is None:
+                        r.admit_s = now
+                    self.stats.queue_wait_s += max(0.0, now - r._enq_s)
+                    r._parked = None
             if stalled and not active:
-                r = queue[0]
-                raise RuntimeError(
-                    f"KV page pool too small for request uid={r.uid} "
-                    f"(prompt {len(r.prompt)} + {r.max_new_tokens} new "
-                    f"tokens) even with every slot idle")
+                # a drained engine that still can't admit: either a
+                # transient squeeze (wait it out on the simulated clock
+                # and retry) or a genuinely impossible request
+                if not self._on_stall():
+                    r = stall_req
+                    raise RuntimeError(
+                        f"KV page pool too small for request uid={r.uid} "
+                        f"(prompt {len(r.prompt)} + {r.max_new_tokens} new "
+                        f"tokens) even with every slot idle")
+                continue
             # retire requests whose budget just filled — before the next
             # round, so no request pays for a round it never reads and
             # its slot (and KV pages) free one round earlier for the queue
@@ -264,8 +459,38 @@ class _SlotEngine:
                       if c >= r.max_new_tokens]:
                 r, _ = active.pop(s)
                 r.done = True
+                r.finish_s = self._now()
+                if (r.deadline_s is not None
+                        and r.finish_s > r.deadline_s + 1e-9):
+                    self.stats.deadline_misses += 1
                 self._retire(s)
                 free.append(s)
+            # demand paging: grow every live slot's claim to cover the
+            # positions the coming round will write; on PoolExhausted,
+            # preempt victims — lowest priority first, then most
+            # remaining budget — until the growth fits (possibly
+            # preempting the grower itself, which also resolves it)
+            if active:
+                k = self._round_width()
+                for s in sorted(active,
+                                key=lambda t: (-active[t][0].priority, t)):
+                    if s not in active:
+                        continue  # already someone else's victim
+                    r, c = active[s]
+                    horizon = min(len(r.prompt) + c - 1 + k, self.max_len)
+                    while s in active:
+                        try:
+                            self._ensure_slot(s, horizon)
+                            break
+                        except PoolExhausted:
+                            victims = sorted(
+                                active,
+                                key=lambda t: (
+                                    active[t][0].priority,
+                                    -(active[t][0].max_new_tokens
+                                      - active[t][1]),
+                                    t))
+                            preempt(victims[0])
             if active:
                 act_slots = np.asarray(sorted(active), np.int32)
                 cur, pos, toks_r, counts = self._timed(
@@ -284,6 +509,8 @@ class _SlotEngine:
                 self.stats.decode_tokens += committed
                 self._after_round(len(takes), committed)
         # single device→host transfer for the whole run
+        if not rounds:
+            return  # everything shed before a single token committed
         all_toks = np.asarray(
             jnp.concatenate([t for t, _ in rounds], axis=1))
         col = 0

@@ -112,6 +112,23 @@ class ServeStats:
     outage_s: float = 0.0
     edge_only_tokens: int = 0
     resyncs: int = 0
+    # overload robustness (serve.scheduler / serve.policy / faults):
+    # ``preemptions`` counts live slots suspended to reclaim their pages,
+    # ``shed`` counts requests refused at admission because their
+    # predicted finish already missed their deadline, ``deadline_misses``
+    # counts served requests that finished late anyway, ``queue_wait_s``
+    # is total simulated time requests spent between (re-)enqueue and
+    # admission, and ``stall_wait_s`` is simulated time the scheduler
+    # itself idled — waiting out page-pool pressure or a gap until the
+    # next request arrival.  The simulated clock decomposes exactly:
+    # every advance is either a charged transfer (``channel_latency_s``)
+    # or a charged scheduler wait (``stall_wait_s``) — property-tested
+    # in ``tests/test_overload_serve.py``.
+    preemptions: int = 0
+    shed: int = 0
+    deadline_misses: int = 0
+    queue_wait_s: float = 0.0
+    stall_wait_s: float = 0.0
 
     def bytes_per_decode_token(self) -> float:
         """Decode *uplink* bytes per accepted token (PR 1/PR 2 metric)."""
@@ -155,6 +172,11 @@ class ServeStats:
             "outage_s": self.outage_s,
             "edge_only_tokens": self.edge_only_tokens,
             "resyncs": self.resyncs,
+            "preemptions": self.preemptions,
+            "shed": self.shed,
+            "deadline_misses": self.deadline_misses,
+            "queue_wait_s": self.queue_wait_s,
+            "stall_wait_s": self.stall_wait_s,
         }
 
 
@@ -300,6 +322,12 @@ class DriftingChannel:
         t = self.phase.transfer_time(nbytes)
         self.clock_s += t
         return t
+
+    def wait(self, seconds: float) -> None:
+        """Sender-side time passing (scheduler stalls, arrival gaps) —
+        advances the schedule clock, the same convention as
+        ``faults.FaultyChannel.wait``."""
+        self.clock_s += max(0.0, float(seconds))
 
 
 class Transport:

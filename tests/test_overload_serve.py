@@ -1,0 +1,426 @@
+"""Overload robustness: demand-paged KV growth, preemption with
+replay-based resume, deadline-aware admission/shedding, and the
+``PressureSchedule`` resource-fault injector.
+
+Covers: the typed ``PoolExhausted`` / hardened ``PageAllocator.free``
+and the build-time geometry floor, allocator interleaving invariants
+(hypothesis), demand-paged streams matching worst-case-reservation
+streams bit for bit with full page reclamation, the headline property —
+lossless ``a_bits=None`` streams under any seeded preemption schedule
+are bit-identical to the unpreempted streams — priority traffic
+surviving 2x pool oversubscription that head-of-line blocks the naive
+baseline, deadline-aware shedding, and the ``ServeStats`` accounting
+invariants (the simulated clock decomposes exactly into channel latency
+plus charged stall waits; every preemption/shed charges once)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.costmodel import Channel, PhaseBreakdown, predict_finish_time
+from repro.models.transformer import LMConfig, init_lm
+from repro.serve import (CollaborativeServingEngine, FaultyChannel,
+                         PageAllocator, PoolExhausted, PressureSchedule,
+                         Request, ResilientCollaborativeEngine)
+from repro.serve.kvcache import _PagedPool
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = LMConfig(name="overload-tiny", n_layers=3, d_model=32, n_heads=4,
+               n_kv=2, d_ff=64, vocab=64, max_seq=64, remat=False)
+PAGE = 8
+LOSSLESS = dict(a_bits=None, edge_int8=False, cloud_int8=False,
+                page_size=PAGE, max_batch=2, max_len=64)
+# 2x oversubscription: 4 slots x 9+40-token worst case wants ~20 usable
+# pages; the pool has 10 (plus the reserved dump page)
+OVERSUB = dict(a_bits=None, edge_int8=False, cloud_int8=False,
+               page_size=PAGE, max_batch=4, max_len=64, num_pages=11)
+BASE_CH = Channel.from_kbps(500, rtt_ms=10)
+PLENS = (6, 7, 9)
+MAX_NEW = 10
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(lens, seed=3):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, CFG.vocab, l).astype(np.int32) for l in lens]
+
+
+@pytest.fixture(scope="module")
+def lossless_pair(params):
+    """(worst-case-reservation oracle, demand-paged engine) — reused
+    across tests; callers install a fresh channel/schedule per run."""
+    ref = CollaborativeServingEngine(params, CFG, cut_layer=1,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     **LOSSLESS)
+    dut = CollaborativeServingEngine(params, CFG, cut_layer=1,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     demand_paged=True, **LOSSLESS)
+    return ref, dut
+
+
+@pytest.fixture(scope="module")
+def oracle(lossless_pair):
+    ref, _ = lossless_pair
+    return ref.generate(_prompts(PLENS), max_new_tokens=MAX_NEW)
+
+
+def _pressured_run(dut, windows, prompts=None, max_new=MAX_NEW):
+    """One seeded run of the demand-paged engine under a pressure
+    schedule, leaving the engine reusable (clock reset via a fresh
+    channel; any still-held pages released)."""
+    dut.channel = FaultyChannel(BASE_CH, seed=0)
+    dut.pressure = PressureSchedule(windows)
+    try:
+        return dut.generate(prompts or _prompts(PLENS),
+                            max_new_tokens=max_new)
+    finally:
+        dut.pressure.apply(dut._pool.allocator, float("inf"))
+        dut.pressure = None
+
+
+# ---------------------------------------------------------------------------
+# Hardened allocator + pool geometry
+# ---------------------------------------------------------------------------
+
+
+def test_pool_exhausted_is_typed_and_state_preserving():
+    alloc = PageAllocator(4)
+    pages = alloc.alloc(2)
+    with pytest.raises(PoolExhausted):
+        alloc.alloc(2)
+    assert isinstance(PoolExhausted("x"), RuntimeError)  # back-compat
+    # the failed alloc mutated nothing
+    assert alloc.num_free == 1 and set(alloc.live) == set(pages)
+    # free of a page the allocator never handed out
+    with pytest.raises(ValueError, match="not live"):
+        alloc.free([0])
+    alloc.free(pages)
+    with pytest.raises(ValueError, match="not live"):
+        alloc.free([pages[0]])                           # double free
+    assert alloc.num_free == 3
+
+
+def test_pool_build_floor_rejects_impossible_geometry():
+    # max_len 64 @ page 8 needs 8 pages/slot + the dump page
+    with pytest.raises(ValueError, match="can never admit"):
+        _PagedPool.build(2, 64, PAGE, num_pages=8)
+    pool = _PagedPool.build(2, 64, PAGE, num_pages=9)    # exactly the floor
+    assert pool.allocator.num_free == 8
+
+
+def test_demand_growth_and_ensure_contract():
+    pool = _PagedPool.build(2, 64, PAGE, num_pages=9)
+    pool.admit([0], np.asarray([6]), np.asarray([1]), 8)
+    assert pool.pages_held(0) == 1
+    assert pool.ensure(0, 17) is True                    # 3 pages now
+    assert pool.pages_held(0) == 3
+    assert pool.ensure(0, 17) is False                   # idempotent
+    held = pool.pages_held(0)
+    with pytest.raises(PoolExhausted):
+        pool.ensure(0, 64 * 2)                           # past the pool
+    assert pool.pages_held(0) == held                    # claim untouched
+    pool.retire(0)
+    assert pool.allocator.num_free == 8
+
+
+# ---------------------------------------------------------------------------
+# PressureSchedule mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_pressure_schedule_squeezes_and_restores():
+    alloc = PageAllocator(9)                             # 8 usable
+    pr = PressureSchedule([(1.0, 2.0, 3), (1.5, 1.8, 1)])
+    assert pr.target_free(0.5) is None
+    assert pr.target_free(1.2) == 3
+    assert pr.target_free(1.7) == 1                      # tightest wins
+    assert pr.next_change(0.0) == 1.0
+    assert pr.next_change(1.6) == 1.8
+    assert pr.next_change(3.0) is None
+    pr.apply(alloc, 0.5)
+    assert pr.held_pages == 0 and alloc.num_free == 8
+    pr.apply(alloc, 1.2)
+    assert pr.held_pages == 5 and alloc.num_free == 3
+    pr.apply(alloc, 1.7)
+    assert pr.held_pages == 7 and alloc.num_free == 1
+    pr.apply(alloc, 1.9)                                 # ceiling rose to 3
+    assert pr.held_pages == 5 and alloc.num_free == 3
+    pr.apply(alloc, 3.0)                                 # all windows past
+    assert pr.held_pages == 0 and alloc.num_free == 8
+    # the squeeze can only take what is free: live pages are untouched
+    live = alloc.alloc(6)
+    pr.apply(alloc, 1.7)
+    assert alloc.num_free == 1 and set(live) <= set(alloc.live)
+    pr.apply(alloc, 3.0)
+    alloc.free(live)
+    assert alloc.num_free == 8
+
+
+# ---------------------------------------------------------------------------
+# Demand paging: same streams, fewer resident pages
+# ---------------------------------------------------------------------------
+
+
+def test_demand_paged_stream_matches_worst_case(lossless_pair, oracle):
+    _, dut = lossless_pair
+    dut.channel = FaultyChannel(BASE_CH, seed=0)
+    got = dut.generate(_prompts(PLENS), max_new_tokens=MAX_NEW)
+    assert got == oracle
+    assert all(len(g) == MAX_NEW for g in got)
+    # every page returned to the free list
+    a = dut._pool.allocator
+    assert a.num_free == a.num_pages - 1 and not a.live
+
+
+def test_admission_reserves_prompt_not_budget(params):
+    eng = CollaborativeServingEngine(params, CFG, cut_layer=1,
+                                     demand_paged=True, **LOSSLESS)
+    reqs = [Request(uid=0, prompt=_prompts([6])[0], max_new_tokens=30)]
+    # drive one admission by hand: after _admit the claim covers the
+    # padded prompt (1 page), not the 30-token budget (5 pages)
+    import jax.numpy as jnp
+    cur = jnp.zeros((2,), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    toks = np.zeros((1, 8), np.int32)
+    toks[0, :6] = reqs[0].prompt
+    eng._admit(jnp.asarray(toks), np.asarray([6]), np.asarray([30]),
+               np.asarray([0]), cur, pos)
+    assert eng._pool.pages_held(0) == 1
+    eng._retire(0)
+
+
+# ---------------------------------------------------------------------------
+# Preemption: bit-identical resume via cached replay
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_bit_identity_seeded(lossless_pair, oracle):
+    _, dut = lossless_pair
+    got = _pressured_run(dut, [(0.02, 0.25, 0)])
+    assert dut.stats.preemptions >= 1                    # it actually fired
+    assert got == oracle                                 # and left no trace
+
+
+def test_preemption_bit_identity_speculative(params):
+    ref = CollaborativeServingEngine(params, CFG, cut_layer=1, spec_k=4,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     **LOSSLESS)
+    want = ref.generate(_prompts(PLENS), max_new_tokens=MAX_NEW)
+    dut = CollaborativeServingEngine(params, CFG, cut_layer=1, spec_k=4,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     demand_paged=True,
+                                     pressure=PressureSchedule(
+                                         [(0.02, 0.3, 1)]),
+                                     **LOSSLESS)
+    got = dut.generate(_prompts(PLENS), max_new_tokens=MAX_NEW)
+    assert dut.stats.preemptions >= 1
+    assert got == want
+
+
+def test_preemption_under_outage_resilient(params):
+    """Pressure and a cloud outage together: preemption, edge-only
+    degradation, and resume compose without forking the stream."""
+    ref = CollaborativeServingEngine(params, CFG, cut_layer=1, spec_k=2,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     **LOSSLESS)
+    want = ref.generate(_prompts(PLENS), max_new_tokens=MAX_NEW)
+    fch = FaultyChannel(BASE_CH, seed=0, outages=[(0.05, 0.2)])
+    dut = ResilientCollaborativeEngine(
+        params, CFG, cut_layer=1, spec_k=2, channel=fch, demand_paged=True,
+        pressure=PressureSchedule([(0.02, 0.3, 0)]), **LOSSLESS)
+    got = dut.generate(_prompts(PLENS), max_new_tokens=MAX_NEW)
+    assert dut.stats.preemptions >= 1
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# 2x oversubscription: priority survives, the naive baseline blocks
+# ---------------------------------------------------------------------------
+
+
+def _overload_reqs():
+    rng = np.random.RandomState(7)
+    mk = lambda: rng.randint(0, CFG.vocab, 9).astype(np.int32)   # noqa: E731
+    rs = [Request(uid=i, prompt=mk(), max_new_tokens=40, priority=0)
+          for i in range(6)]
+    rs += [Request(uid=10 + i, prompt=mk(), max_new_tokens=20, priority=1,
+                   arrival_s=0.3, deadline_s=0.3 + 0.9) for i in range(2)]
+    return rs
+
+
+def test_priority_survives_oversubscription(params):
+    """The ISSUE's acceptance scenario: at 2x pool oversubscription with
+    mixed-priority traffic, the robust engine preempts best-effort work
+    and commits every priority-class token before its deadline, while
+    the naive worst-case-reservation baseline head-of-line blocks the
+    late-arriving priority requests past their deadlines."""
+    results = {}
+    for name, kw in [("naive", {}),
+                     ("robust", dict(demand_paged=True,
+                                     admission="deadline"))]:
+        eng = CollaborativeServingEngine(
+            params, CFG, cut_layer=1,
+            channel=FaultyChannel(BASE_CH, seed=0), **OVERSUB, **kw)
+        reqs = _overload_reqs()
+        eng.generate_requests(reqs)
+        results[name] = (eng, reqs)
+
+    naive, nreqs = results["naive"]
+    robust, rreqs = results["robust"]
+    npri = [r for r in nreqs if r.priority > 0]
+    rpri = [r for r in rreqs if r.priority > 0]
+    # robust: all priority tokens committed, on time, via preemption
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in rpri)
+    assert all(r.finish_s <= r.deadline_s for r in rpri)
+    assert robust.stats.preemptions >= 1
+    assert robust.stats.deadline_misses == 0
+    # naive: no preemption machinery, the full-budget reservations of
+    # the best-effort wave head-of-line block the priority class
+    assert naive.stats.preemptions == 0
+    assert all(r.finish_s > r.deadline_s for r in npri)
+    assert naive.stats.deadline_misses == len(npri)
+    assert max(r.admit_s for r in rpri) < min(r.admit_s for r in npri)
+    # and preemption starved nobody: best-effort still completes fully
+    for _, reqs in results.values():
+        assert all(len(r.out_tokens) == r.max_new_tokens
+                   for r in reqs if r.priority == 0)
+    # identical traffic, identical streams — robustness is scheduling,
+    # not output drift (lossless mode)
+    assert [r.out_tokens for r in rreqs] == [r.out_tokens for r in nreqs]
+
+
+def test_deadline_shedding(params):
+    eng = CollaborativeServingEngine(params, CFG, cut_layer=1,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     demand_paged=True, admission="deadline",
+                                     **LOSSLESS)
+    ps = _prompts((6, 7, 6))
+    reqs = [Request(uid=0, prompt=ps[0], max_new_tokens=8, deadline_s=1e9),
+            Request(uid=1, prompt=ps[1], max_new_tokens=8, deadline_s=1e-6),
+            Request(uid=2, prompt=ps[2], max_new_tokens=8)]  # no deadline
+    outs = eng.generate_requests(reqs)
+    assert reqs[1].shed and reqs[1].done and outs[1] == []
+    assert reqs[1].admit_s is None and reqs[1].finish_s is None
+    assert not reqs[0].shed and len(outs[0]) == 8
+    assert not reqs[2].shed and len(outs[2]) == 8        # never shed
+    assert eng.stats.shed == 1
+    # a shed request is not a deadline miss — it never entered service
+    assert eng.stats.deadline_misses == 0
+
+
+def test_predict_finish_time_shape():
+    rd = PhaseBreakdown(prefill_s=0.0, decode_s=0.1, channel_s=0.05,
+                        tokens=2.0)
+    t0 = predict_finish_time(rd, now=1.0, max_new=8)     # 4 rounds
+    assert t0 == pytest.approx(1.0 + 4 * rd.total_s)
+    # queued work drains across slots ahead of this request
+    t1 = predict_finish_time(rd, now=1.0, max_new=8, queue_tokens=16.0,
+                             slots=2)
+    assert t1 == pytest.approx(t0 + 4 * rd.total_s)
+    # prefill shifts the whole schedule
+    t2 = predict_finish_time(rd, now=1.0, max_new=8, prefill_s=0.5)
+    assert t2 == pytest.approx(t0 + 0.5)
+
+
+# ---------------------------------------------------------------------------
+# ServeStats accounting invariants
+# ---------------------------------------------------------------------------
+
+
+def test_stats_clock_decomposition_and_counters(params):
+    """In a fault-free clocked run the simulated clock advances only
+    through transfers and charged waits: ``clock_s`` must equal
+    ``channel_latency_s + stall_wait_s`` exactly, and per-request
+    preemption counts must sum to the engine counter."""
+    fch = FaultyChannel(BASE_CH, seed=0)
+    eng = CollaborativeServingEngine(
+        params, CFG, cut_layer=1, channel=fch, demand_paged=True,
+        pressure=PressureSchedule([(0.02, 0.25, 0)]), **LOSSLESS)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=MAX_NEW,
+                    arrival_s=0.05 * i)
+            for i, p in enumerate(_prompts(PLENS))]
+    eng.generate_requests(reqs)
+    st = eng.stats
+    assert st.preemptions >= 1
+    assert st.preemptions == sum(r.preemptions for r in reqs)
+    assert fch.clock_s == pytest.approx(
+        st.channel_latency_s + st.stall_wait_s, rel=1e-9)
+    assert st.stall_wait_s > 0                           # waits were charged
+    assert st.queue_wait_s > 0                           # preempts re-queued
+    assert st.shed == 0 and st.deadline_misses == 0
+    for r in reqs:
+        assert r.finish_s >= r.admit_s >= r.arrival_s
+    rep = st.report()
+    for key in ("preemptions", "shed", "deadline_misses", "queue_wait_s",
+                "stall_wait_s"):
+        assert key in rep
+
+
+# ---------------------------------------------------------------------------
+# Property tests (guarded like the rest of tier 1)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+if st is not None:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 5)),
+                    max_size=60))
+    def test_allocator_interleaving_property(ops):
+        """Any alloc/free interleaving keeps the free list and the live
+        set exact complements: no page leaks, none is handed out twice,
+        and a failed alloc mutates nothing."""
+        alloc = PageAllocator(17)
+        held = []
+        for is_alloc, n in ops:
+            if is_alloc:
+                if n > alloc.num_free:
+                    before = (alloc.num_free, set(alloc.live))
+                    with pytest.raises(PoolExhausted):
+                        alloc.alloc(n)
+                    assert (alloc.num_free, set(alloc.live)) == before
+                else:
+                    held.extend(alloc.alloc(n))
+            elif held:
+                alloc.free([held.pop() for _ in range(min(n, len(held)))])
+            assert len(held) == len(set(held))
+            assert set(held) == set(alloc.live)
+            assert alloc.num_free == 16 - len(held)
+            assert all(1 <= p < 17 for p in held)
+        if held:
+            p = held[0]
+            alloc.free([p])
+            before = (alloc.num_free, set(alloc.live))
+            with pytest.raises(ValueError):
+                alloc.free([p])                          # double free
+            assert (alloc.num_free, set(alloc.live)) == before
+
+    @settings(max_examples=8, deadline=None)
+    @given(windows=st.lists(
+        st.tuples(st.floats(0.0, 0.4), st.floats(0.05, 0.5),
+                  st.integers(0, 2)),
+        min_size=1, max_size=2))
+    def test_preemption_schedule_bit_identity_property(
+            windows, lossless_pair, oracle):
+        """The headline property: under ANY pressure schedule the
+        lossless greedy streams are bit-identical to the unpreempted
+        oracle — preemption/resume is invisible in the output."""
+        _, dut = lossless_pair
+        got = _pressured_run(dut, [(t0, t0 + dur, n)
+                                   for t0, dur, n in windows])
+        assert got == oracle
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_allocator_interleaving_property():
+        pass
+
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_preemption_schedule_bit_identity_property():
+        pass
