@@ -33,6 +33,7 @@ DRIFT_TRACKED = {
                                "resilient_vs_naive_sim_speedup"],
     "BENCH_overload_serve.json": ["goodput_vs_naive",
                                   "priority_ontime_frac"],
+    "BENCH_sharded_serve.json": ["speedup_vs_1dev.4"],
 }
 DRIFT_RATIO = 2.0
 
@@ -77,7 +78,7 @@ def main(quick: bool = False) -> None:
     from benchmarks import (adaptive_serve, chaos_serve, collab_decode,
                             fig3_breakdown, kernel_bench, optimized_decode,
                             overload_serve, paged_decode, roofline,
-                            spec_decode, table3_partition,
+                            sharded_serve, spec_decode, table3_partition,
                             table12_transmission)
 
     # snapshot the committed headline numbers before any section
@@ -161,6 +162,11 @@ def main(quick: bool = False) -> None:
                       f"p99_wait={r['p99_queue_wait_s']:.2f}s;"
                       f"lossless_bit_identical="
                       f"{r['lossless_preemption_bit_identical']}")
+
+    section("sharded_serve", lambda: sharded_serve.run(quick=quick),
+            lambda r: f"speedup@4dev={r['speedup_vs_1dev']['4']:.2f}x;"
+                      f"lossless_bit_identical={r['lossless_bit_identical']};"
+                      f"kernel_parity={r['kernel_interpret_parity_ok']}")
 
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")

@@ -24,9 +24,24 @@ Run:  PYTHONPATH=src python examples/collaborative_serve.py
       PYTHONPATH=src python examples/collaborative_serve.py --overload
       (the flag appends the overload-robustness demo: a priority burst
       preempting a best-effort wave on a 2x oversubscribed KV pool)
+      PYTHONPATH=src python examples/collaborative_serve.py --mesh 4
+      (serves the collaborative engine with the cloud suffix + paged KV
+      pool tensor-parallel over N emulated host devices)
 """
 import argparse
+import os
 import time
+
+# --mesh N needs N XLA host-platform devices, and the device count is
+# fixed the moment jax is imported — pre-parse just that flag here
+_MESH = argparse.ArgumentParser(add_help=False)
+_MESH.add_argument("--mesh", type=int, default=1)
+_MESH = max(1, _MESH.parse_known_args()[0].mesh)
+if _MESH > 1 and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={_MESH}").strip()
 
 import jax
 import numpy as np
@@ -97,8 +112,15 @@ def overload_demo(params, cut_layer):
           "is bit-transparent — see tests/test_overload_serve.py)")
 
 
-def main(overload: bool = False):
+def main(overload: bool = False, mesh_n: int = 1):
     print(f"model: {CFG.name} ({CFG.param_count() / 1e6:.1f}M params)")
+    mesh = None
+    if mesh_n > 1:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(model=mesh_n)
+        print(f"cloud mesh: {dict(mesh.shape)} over "
+              f"{len(jax.devices())} host devices (suffix weights + paged "
+              f"KV pool shard over 'model'; the edge side replicates)")
     params = init_lm(jax.random.PRNGKey(0), CFG)
 
     # --- Algorithm 1: choose the cut for this environment ---------------
@@ -129,7 +151,7 @@ def main(overload: bool = False):
 
     collab = CollaborativeServingEngine(params, CFG, cut_layer=cut_layer,
                                         channel=channel, max_len=64,
-                                        max_batch=4, timed=True)
+                                        max_batch=4, timed=True, mesh=mesh)
     t0 = time.perf_counter()
     got = collab.generate(prompts, max_new_tokens=8)
     t_collab = time.perf_counter() - t0
@@ -213,4 +235,8 @@ if __name__ == "__main__":
                     help="append the overload-robustness demo: a priority "
                          "burst preempting a best-effort wave on a 2x "
                          "oversubscribed KV page pool")
-    main(overload=ap.parse_args().overload)
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="tensor-parallel degree for the cloud suffix and "
+                         "paged KV pool (emulated host devices on CPU)")
+    args = ap.parse_args()
+    main(overload=args.overload, mesh_n=args.mesh)

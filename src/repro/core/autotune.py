@@ -162,6 +162,7 @@ def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
                 draft_flops: float = 0.0, acceptance: float = 0.8,
                 ks: Sequence[int] = (1, 2, 4, 8, 16, 32),
                 return_bytes: float = 4.0, rows: int = 1,
+                cloud_layers: int = 0, cloud_act_bytes: float = 0.0,
                 ) -> Tuple[SpecKPerf, List[SpecKPerf]]:
     """Pick the draft length k minimizing predicted time per accepted
     token for this channel/acceptance-rate — per-step flop/byte inputs
@@ -173,7 +174,8 @@ def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
             k=k, edge_flops=edge_flops, cloud_flops=cloud_flops,
             blob_bytes=blob_bytes, edge=edge, cloud=cloud, channel=channel,
             draft_flops=draft_flops, acceptance=acceptance,
-            return_bytes=return_bytes, rows=rows)
+            return_bytes=return_bytes, rows=rows,
+            cloud_layers=cloud_layers, cloud_act_bytes=cloud_act_bytes)
         uplink = k * blob_bytes + (k - 1) * TOK_BYTES * rows + MSG_BYTES
         perfs.append(SpecKPerf(
             k=k, breakdown=bd,
@@ -201,7 +203,12 @@ def lm_round_args(cfg, cut_layer: int, *, batch: int) -> dict:
         edge_flops=2 * blk * (cut_layer + 1) * batch,
         cloud_flops=suffix, draft_flops=suffix,
         blob_bytes=batch * (cfg.d_model + QP_BYTES),
-        return_bytes=TOK_BYTES * batch, rows=batch)
+        return_bytes=TOK_BYTES * batch, rows=batch,
+        # TP all-reduce inputs: suffix depth and the [B, 1, D] f32
+        # activation each of its blocks reduces (costmodel._tp_allreduce_s
+        # charges them only when cloud.n_chips > 1 with a modeled link)
+        cloud_layers=cfg.n_layers - cut_layer - 1,
+        cloud_act_bytes=batch * cfg.d_model * 4.0)
 
 
 def spec_k_for_lm(cfg, cut_layer: int, *, batch: int, channel: Channel,

@@ -138,11 +138,29 @@ class PhaseBreakdown:
         return self.total_s / max(self.tokens, 1e-9)
 
 
+def _tp_allreduce_s(cloud: DeviceModel, cloud_layers: int,
+                    cloud_act_bytes: float) -> float:
+    """Per-step tensor-parallel collective cost of the cloud suffix:
+    Megatron TP pays two all-reduces per block (after attention out-proj
+    and after FFN-out), each moving ``2·(n-1)/n`` of the activation
+    bytes per chip on a ring.  Zero for a single chip or an unmodeled
+    interconnect — the term only kicks in when a mesh actually scales
+    ``n_chips`` up, which is what lets the tuner trade cloud
+    parallelism against channel cost."""
+    if cloud.n_chips <= 1 or cloud.link_bw <= 0 or cloud_layers <= 0:
+        return 0.0
+    ring = 2.0 * (cloud.n_chips - 1) / cloud.n_chips \
+        * cloud_act_bytes / cloud.link_bw
+    return 2.0 * cloud_layers * ring
+
+
 def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
                             blob_bytes: float, edge: DeviceModel,
                             cloud: DeviceModel, channel: Channel,
                             return_bytes: float = 4.0,
-                            msg_bytes: float = MSG_BYTES) -> PhaseBreakdown:
+                            msg_bytes: float = MSG_BYTES,
+                            cloud_layers: int = 0,
+                            cloud_act_bytes: float = 0.0) -> PhaseBreakdown:
     """Predicted per-token cost of *incremental* collaborative decode.
 
     With split KV caches, each generated token runs only the new-token
@@ -158,7 +176,8 @@ def collab_decode_step_time(*, edge_flops: float, cloud_flops: float,
     count (``Channel.expected_retx``)."""
     edge_s = edge_flops / edge.peak_ops_int8 + edge.launch_overhead_s
     cloud_s = (cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
-               + cloud.launch_overhead_s)
+               + cloud.launch_overhead_s
+               + _tp_allreduce_s(cloud, cloud_layers, cloud_act_bytes))
     channel_s = (channel.transfer_time(blob_bytes + msg_bytes)
                  + channel.transfer_time(return_bytes + msg_bytes)) \
         * channel.expected_retx()
@@ -182,7 +201,9 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
                            acceptance: float = 1.0,
                            return_bytes: float = 4.0,
                            rows: int = 1,
-                           msg_bytes: float = MSG_BYTES) -> PhaseBreakdown:
+                           msg_bytes: float = MSG_BYTES,
+                           cloud_layers: int = 0,
+                           cloud_act_bytes: float = 0.0) -> PhaseBreakdown:
     """Predicted cost of one speculative *draft/verify round* of length
     ``k`` (the flop/byte arguments are per-step quantities, exactly
     ``collab_decode_step_time``'s).
@@ -206,8 +227,10 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
     edge_step = edge_flops / edge.peak_ops_int8 + edge.launch_overhead_s
     draft_step = draft_flops / edge.peak_ops_int8 + edge.launch_overhead_s
     edge_s = k * edge_step + (k * draft_step if k > 1 else 0.0)
+    # verify acts are [B, k, D]: the TP all-reduces move k× the bytes
     cloud_s = (k * cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
-               + cloud.launch_overhead_s)
+               + cloud.launch_overhead_s
+               + _tp_allreduce_s(cloud, cloud_layers, k * cloud_act_bytes))
     uplink = k * blob_bytes + (k - 1) * TOK_BYTES * rows + msg_bytes
     downlink = return_bytes + msg_bytes \
         + (float(-(-k // 8)) * rows if k > 1 else 0.0)

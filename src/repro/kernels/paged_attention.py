@@ -58,6 +58,14 @@ S=8):
 all « 16 MiB; on real TPU prefer page_size a multiple of 32 (int8
 sublane) and S·group padded to 8 — the interpret/ref paths accept any
 size.
+
+Tensor-parallel: ``paged_flash_mq_sharded``/``paged_flash_decode_sharded``
+partition the pool, scales, and query heads by kv head over a mesh's
+``model`` axis via ``shard_map`` — each shard streams only its own KV
+slice and no collective is needed (attention is per-head independent;
+GQA groups never straddle shards because the guard requires
+``n_kv % tp == 0``).  ``set_tp_mesh`` installs the mesh the dispatchers
+route through on the pallas path.
 """
 from __future__ import annotations
 
@@ -74,7 +82,9 @@ from repro.kernels.pltpu_compat import compiler_params
 
 __all__ = ["paged_attention", "paged_multiquery_attention",
            "paged_flash_decode", "paged_flash_mq",
-           "paged_attention_ref", "paged_attention_mq_ref"]
+           "paged_flash_decode_sharded", "paged_flash_mq_sharded",
+           "paged_attention_ref", "paged_attention_mq_ref",
+           "set_tp_mesh"]
 
 # finite stand-in for -inf: (-1e30) - (-1e30) = 0 keeps exp() NaN-free on
 # fully-masked pages, where true -inf would poison the running max
@@ -291,6 +301,95 @@ def paged_attention_ref(
     return out[:, 0]
 
 
+def paged_flash_mq_sharded(
+    q: jax.Array,                  # [B, S, n_heads, hd]
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    q_start: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    *,
+    mesh: jax.sharding.Mesh,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tensor-parallel ``paged_flash_mq`` via ``shard_map``: the page
+    pool, scales, and query heads partition by kv head over the mesh's
+    ``model`` axis, so each shard DMAs and dequantizes ONLY its own
+    1 B/elem KV slice — the whole point of TP-ing the pool: per-device
+    KV bandwidth drops by the TP degree.  Batch rides the ``data`` axis
+    when it divides.  No inter-shard collective is needed at all —
+    attention is independent per kv head, and GQA grouping survives the
+    split exactly because ``n_kv % tp == 0`` keeps each kv head's q
+    group on its shard.  Falls back to the unsharded kernel when the
+    head dim doesn't divide (guard mirrors ``launch.shardings``)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, s, n_heads, hd = q.shape
+    n_kv = k_pages.shape[2]
+    tp = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+    if tp == 1 or n_kv % tp != 0:
+        return paged_flash_mq(q, k_pages, v_pages, block_tables, lengths,
+                              q_start, k_scale, v_scale, interpret=interpret)
+    # normalize to [B, n_kv] OUTSIDE the map so scales partition by head
+    ks = _norm_scales(k_scale, b, n_kv)
+    vs = _norm_scales(v_scale, b, n_kv)
+    b_ax = None
+    if "data" in mesh.axis_names and b % int(mesh.shape["data"]) == 0:
+        b_ax = "data"
+
+    fn = shard_map(
+        functools.partial(paged_flash_mq, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(b_ax, None, "model", None),        # q (heads split)
+                  P(None, None, "model", None),        # k_pages (kv split)
+                  P(None, None, "model", None),        # v_pages
+                  P(b_ax, None),                       # block tables
+                  P(b_ax), P(b_ax),                    # lengths, q_start
+                  P(b_ax, "model"), P(b_ax, "model")),  # scales
+        out_specs=P(b_ax, None, "model", None),
+        check_rep=False,
+    )
+    return fn(q, k_pages, v_pages, block_tables,
+              lengths, q_start.astype(jnp.int32), ks, vs)
+
+
+def paged_flash_decode_sharded(
+    q: jax.Array,                  # [B, n_heads, hd]
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    *,
+    mesh: jax.sharding.Mesh,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tensor-parallel decode step (S=1 case of the sharded q-block)."""
+    out = paged_flash_mq_sharded(q[:, None], k_pages, v_pages, block_tables,
+                                 lengths, lengths - 1, k_scale, v_scale,
+                                 mesh=mesh, interpret=interpret)
+    return out[:, 0]
+
+
+# Deployment hook: a TPU pod sets the serving mesh once and the
+# dispatchers below route every pallas-path call through shard_map.  The
+# engines deliberately DON'T set this (their CPU ref path shards via
+# GSPMD on the jit boundary instead) — a module global would leak TP
+# into same-process unsharded oracle engines.
+_TP_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_tp_mesh(mesh: Optional[jax.sharding.Mesh]) -> None:
+    """Install (or clear, with None) the mesh the pallas-path
+    dispatchers shard over."""
+    global _TP_MESH
+    _TP_MESH = mesh
+
+
 def _resolve_impl(impl: Optional[str]) -> str:
     impl = impl or _DEFAULT_IMPL
     if impl == "auto":
@@ -318,6 +417,10 @@ def paged_attention(
     if impl == "ref":
         return paged_attention_ref(q, k_pages, v_pages, block_tables,
                                    lengths, k_scale, v_scale)
+    if _TP_MESH is not None:
+        return paged_flash_decode_sharded(
+            q, k_pages, v_pages, block_tables, lengths, k_scale, v_scale,
+            mesh=_TP_MESH, interpret=(impl == "pallas_interpret"))
     return paged_flash_decode(q, k_pages, v_pages, block_tables, lengths,
                               k_scale, v_scale,
                               interpret=(impl == "pallas_interpret"))
@@ -342,6 +445,11 @@ def paged_multiquery_attention(
     if impl == "ref":
         return paged_attention_mq_ref(q, k_pages, v_pages, block_tables,
                                       lengths, q_start, k_scale, v_scale)
+    if _TP_MESH is not None:
+        return paged_flash_mq_sharded(
+            q, k_pages, v_pages, block_tables, lengths, q_start,
+            k_scale, v_scale, mesh=_TP_MESH,
+            interpret=(impl == "pallas_interpret"))
     return paged_flash_mq(q, k_pages, v_pages, block_tables, lengths,
                           q_start, k_scale, v_scale,
                           interpret=(impl == "pallas_interpret"))

@@ -8,18 +8,39 @@ sharding may span it (see repro.launch.shardings).
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "batch_axes",
-           "fsdp_axes"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_serve_mesh",
+           "batch_axes", "fsdp_axes", "mesh_context"]
+
+
+def _mk_mesh(shape, axes, devices=None) -> jax.sharding.Mesh:
+    # newer jax wants explicit Auto axis types; 0.4.x has no AxisType
+    kw = {} if devices is None else {"devices": devices}
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes), **kw)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes, **kw)
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where it exists (newer jax); a no-op
+    context on 0.4.x, where the plain ``with mesh:`` the callers pair
+    this with already provides the ambient mesh."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return contextlib.nullcontext()
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
@@ -27,9 +48,20 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mk_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(model: int = 1, data: int = 1) -> jax.sharding.Mesh:
+    """Cloud-verify TP mesh for the serving engines: ``model`` is the
+    tensor-parallel degree the cloud suffix (and the paged KV pool's
+    kv-head dim) shards over, ``data`` the slot-parallel axis.  Clamps
+    like ``make_host_mesh`` so tests on few devices stay runnable, but
+    keeps the requested ``model`` degree whenever enough devices exist —
+    the serving meshes are (1, N) in practice."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    data = max(1, min(data, n // model))
+    return _mk_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple:

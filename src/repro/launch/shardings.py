@@ -29,7 +29,9 @@ from jax.sharding import PartitionSpec as P
 from repro.launch.mesh import batch_axes, fsdp_axes
 
 __all__ = ["param_shardings", "data_sharding", "replicated",
-           "cache_sharding", "logits_sharding", "spec_for_param"]
+           "cache_sharding", "cache_spec", "logits_sharding",
+           "spec_for_param", "paged_pool_spec", "paged_scale_spec",
+           "paged_pool_shardings"]
 
 
 def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
@@ -151,13 +153,13 @@ def logits_sharding(mesh: Mesh, ndim: int, *, batch: int,
     return NamedSharding(mesh, P(*spec))
 
 
-def cache_sharding(mesh: Mesh, *, batch: int, seq: int, n_kv: int,
-                   head_dim: int = 128) -> NamedSharding:
-    """KV cache [L, B, S, H, D]: batch over (pod,data) when divisible,
-    head_dim over model (decode writes a dynamic S slice — sharding S
-    would force SPMD full-rematerialization of the update; sharding D
-    keeps the dynamic-update-slice local).  batch=1 spreads S over the
-    batch axes instead."""
+def cache_spec(mesh: Mesh, *, batch: int, seq: int, n_kv: int,
+               head_dim: int = 128) -> P:
+    """PartitionSpec for a dense KV cache [L, B, S, H, D]: batch over
+    (pod,data) when divisible, head_dim over model (decode writes a
+    dynamic S slice — sharding S would force SPMD full-rematerialization
+    of the update; sharding D keeps the dynamic-update-slice local).
+    batch=1 spreads S over the batch axes instead."""
     ba = batch_axes(mesh)
     b_ax = None
     s_ax = None
@@ -169,4 +171,58 @@ def cache_sharding(mesh: Mesh, *, batch: int, seq: int, n_kv: int,
     h_ax = None
     if d_ax is None:
         h_ax = _fit(n_kv, mesh, ("model",))
-    return NamedSharding(mesh, P(None, b_ax, s_ax, h_ax, d_ax))
+    return P(None, b_ax, s_ax, h_ax, d_ax)
+
+
+def cache_sharding(mesh: Mesh, *, batch: int, seq: int, n_kv: int,
+                   head_dim: int = 128) -> NamedSharding:
+    """``cache_spec`` wrapped as a NamedSharding (the historical API)."""
+    return NamedSharding(mesh, cache_spec(mesh, batch=batch, seq=seq,
+                                          n_kv=n_kv, head_dim=head_dim))
+
+
+def paged_pool_spec(mesh: Mesh, *, n_pages: int, n_kv: int,
+                    head_dim: int) -> P:
+    """PartitionSpec for a paged KV page pool
+    ``[L, n_pages, page_size, n_kv, head_dim]``: kv heads over ``model``
+    — each TP shard stores, dequantizes, and attends only its own KV
+    slice — and the page dim over the batch axes when divisible (pages
+    are slot-owned, so this is "slots on the data axis" at page
+    granularity).  The layer dim and ``page_size`` stay unsharded (a
+    page is the DMA unit); when ``n_kv`` doesn't divide the TP degree
+    the pool replicates — splitting ``head_dim`` instead would tear the
+    per-head dequant·softmax·gather apart and forces SPMD to fully
+    rematerialize the gathered pages (measured, not hypothetical)."""
+    h_ax = _fit(n_kv, mesh, ("model",))
+    p_ax = _fit(n_pages, mesh, batch_axes(mesh))
+    return P(None, p_ax, None, h_ax, None)
+
+
+def paged_scale_spec(mesh: Mesh, *, batch: int, n_kv: int) -> P:
+    """Per-slot INT8 scale rows ``[L, B, n_kv]`` of a paged cache: shard
+    like the pool they calibrate — kv heads over ``model``, slots over
+    the batch axes — under the same divisibility guards."""
+    h_ax = _fit(n_kv, mesh, ("model",))
+    ba = batch_axes(mesh)
+    b_ax = None
+    if ba and batch % _axes_size(mesh, ba) == 0:
+        b_ax = ba if len(ba) > 1 else ba[0]
+    return P(None, b_ax, h_ax)
+
+
+def paged_pool_shardings(cache: Any, mesh: Mesh) -> Any:
+    """NamedSharding tree for a paged cache dict (``k_pages``/``v_pages``
+    + optional ``k_scale``/``v_scale`` — see ``transformer.init_cache``)."""
+    out = {}
+    for k, v in cache.items():
+        if k.endswith("_pages"):
+            _, n_pages, _, n_kv, hd = v.shape
+            spec = paged_pool_spec(mesh, n_pages=n_pages, n_kv=n_kv,
+                                   head_dim=hd)
+        elif k.endswith("_scale"):
+            _, b, n_kv = v.shape
+            spec = paged_scale_spec(mesh, batch=b, n_kv=n_kv)
+        else:
+            spec = P()
+        out[k] = NamedSharding(mesh, spec)
+    return out

@@ -663,14 +663,28 @@ def moe_sharded(p: Params, x: jax.Array, *, top_k: int,
     wi = qw(qctx, f"{name}/wi", p["wi"])
     wg = qw(qctx, f"{name}/wg", p["wg"])
     wo = qw(qctx, f"{name}/wo", p["wo"])
-    y, aux = jax.shard_map(
+    y, aux = _shard_map_compat(
         local_moe,
         in_specs=(P(), P(None, None, model_axis), P(None, None, model_axis),
                   P(None, model_axis, None), P(batch_spec, None, None)),
         out_specs=(P(batch_spec, None, model_axis), P()),
-        check_vma=False,
     )(p["router"], wi, wg, wo, x)
     return y, aux
+
+
+def _shard_map_compat(f, *, in_specs, out_specs):
+    """Unchecked shard_map over the ambient mesh: ``jax.shard_map`` with
+    ``check_vma`` on newer jax, ``jax.experimental.shard_map.shard_map``
+    with the ambient physical mesh made explicit (and ``check_rep``) on
+    0.4.x, where no top-level alias exists."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax._src.mesh import thread_resources
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=thread_resources.env.physical_mesh,
+                     in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 # -- vision helpers -----------------------------------------------------------

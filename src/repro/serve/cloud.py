@@ -9,12 +9,14 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as TF
 from repro.serve.kvcache import (_PagedPool, _paged_prefill_merge,
                                  _paged_prefill_view)
 from repro.serve.scheduler import _jit_phase, _SlotEngine
+from repro.serve.sharding import place_cloud_engine
 
 Params = Any
 
@@ -25,15 +27,19 @@ class ServingEngine(_SlotEngine):
     ``paged=True`` swaps the dense per-slot cache for the block-table
     page pool (+ ``int8_kv=True`` for 1 B/elem pages with per-slot
     scales); ``cache_dtype`` overrides the dense cache's storage dtype
-    (e.g. bf16 for the fp16-cache baseline in the benchmarks)."""
+    (e.g. bf16 for the fp16-cache baseline in the benchmarks);
+    ``mesh`` TP-shards the params and KV pool over its ``model`` axis
+    (see ``serve.sharding``) and runs every phase under the mesh."""
 
     def __init__(self, params: Params, cfg: TF.LMConfig, *,
                  max_batch: int = 4, max_len: int = 128,
                  paged: bool = False, page_size: int = 16,
                  int8_kv: bool = False, num_pages: Optional[int] = None,
-                 cache_dtype=None, timed: bool = False):
+                 cache_dtype=None, timed: bool = False,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         super().__init__(cfg, max_batch=max_batch, max_len=max_len,
                          timed=timed)
+        self.mesh = mesh
         self.params = params
         self.paged = paged
         self.page_size = page_size
@@ -45,13 +51,17 @@ class ServingEngine(_SlotEngine):
                 self.cfg, max_batch, max_len, paged=True,
                 page_size=page_size, quantized=int8_kv,
                 num_pages=self._pool.allocator.num_pages, dtype=cache_dtype)
-            self._prefill = _jit_phase(self._paged_prefill_impl, donate=(2,))
+            self._prefill = _jit_phase(self._paged_prefill_impl, donate=(2,),
+                                       mesh=mesh)
         else:
             self._cache = TF.init_cache(self.cfg, max_batch, max_len=max_len,
                                         dtype=cache_dtype,
                                         quantized=int8_kv)
-            self._prefill = _jit_phase(self._prefill_impl, donate=(2,))
-        self._decode = _jit_phase(self._decode_impl, donate=(2,))
+            self._prefill = _jit_phase(self._prefill_impl, donate=(2,),
+                                       mesh=mesh)
+        self._decode = _jit_phase(self._decode_impl, donate=(2,), mesh=mesh)
+        if mesh is not None:
+            place_cloud_engine(self)
 
     def _prefill_impl(self, params, toks, cache, slots, cur, pos, plens):
         self.trace_counts["prefill"] += 1

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costmodel import Channel
+from repro.core.costmodel import CLOUD_TITANXP_CLASS, Channel
 from repro.core.quant import QuantParams, compute_qparams, dequantize, \
     quantize
 from repro.models import layers as ML
@@ -60,6 +60,8 @@ from repro.serve.scheduler import (Request, _bucket_len, _jit_phase,
                                    _SlotEngine)
 from repro.serve.faults import FaultyChannel, PressureSchedule
 from repro.serve.overload import _OverloadMixin
+from repro.serve.seedpath import _SeedPathMixin
+from repro.serve.sharding import place_collab_engine, tp_size
 from repro.serve.spec import _SpecDraftMixin
 from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
                                    CloudUnreachable, DriftingChannel,
@@ -76,8 +78,8 @@ __all__ = ["ServingEngine", "CollaborativeServingEngine", "PageAllocator",
            "_MSG_BYTES", "_QP_BYTES", "_TOK_BYTES"]
 
 
-class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
-                                 _SlotEngine):
+class CollaborativeServingEngine(_SpecDraftMixin, _SeedPathMixin,
+                                 _OverloadMixin, _SlotEngine):
     """Paper mode with incremental decode over split, shared-table paged
     INT8 KV caches (see the module docstring), plus the online tuning
     loop.
@@ -97,11 +99,19 @@ class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
     full loop: link telemetry re-tunes both ``spec_k`` (between rounds)
     and ``cut_layer`` (at request-admission boundaries, via the
     re-partition barrier + ``_CutBank``).  ``candidate_cuts`` overrides
-    the default cut grid {0, mid, last-1} ∪ {cut_layer}.  k switches
-    are immediate between rounds, except raising out of k=1 with live
-    requests: their draft caches were never filled (k=1 rounds are the
-    cheap serial step), so the raise drains them first — the same
-    barrier a re-partition uses."""
+    the default cut grid {0, mid, last-1} ∪ {cut_layer}.  Every k switch
+    is immediate between rounds: raising out of k=1 with live requests
+    — whose draft caches were never filled, k=1 rounds being the cheap
+    serial step — rebuilds their draft K/V from committed prefix state
+    (``serve.spec._rebuild_draft_caches``) instead of paying the drain
+    barrier; only cut switches still drain.
+
+    ``mesh`` places the engine on a ``("data", "model")`` device mesh
+    (``launch.mesh.make_serve_mesh``): the cloud suffix weights and
+    paged KV pool shard tensor-parallel over ``model`` while everything
+    edge-side replicates, so cloud prefill/decode/verify run as
+    mesh-jitted computations (``serve.sharding``) and the auto policy
+    prices the mesh via a TP-scaled cloud device model."""
 
     def __init__(self, params: Params, cfg: TF.LMConfig, *, cut_layer: int,
                  channel: Optional[Channel] = None, max_len: int = 128,
@@ -115,11 +125,13 @@ class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
                  demand_paged: bool = False,
                  pressure: Optional[PressureSchedule] = None,
                  admission: Union[DeadlineAdmission, str, None] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None,
                  timed: bool = False):
         assert 0 <= cut_layer < cfg.n_layers, \
             f"cut_layer {cut_layer} outside [0, {cfg.n_layers})"
         super().__init__(cfg, max_batch=max_batch, max_len=max_len,
                          timed=timed)
+        self.mesh = mesh
         self.cut = cut_layer
         self.transport = Transport(channel)
         self.a_bits = a_bits
@@ -149,8 +161,13 @@ class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
                 "every candidate cut"
             cuts = candidate_cuts or tuple(sorted(
                 {0, (cfg.n_layers - 1) // 2, cfg.n_layers - 2, cut_layer}))
+            # a TP mesh scales the cloud term of the policy's cost grid:
+            # FLOPs/device (+ the per-layer all-reduce when link_bw > 0),
+            # so a bigger mesh discovers its own edge-ward optimal cut
             policy = AdaptivePolicy(cfg, batch=max_batch, cuts=cuts,
                                     ks=(1, 2, 4, 8),
+                                    cloud=CLOUD_TITANXP_CLASS.scaled(
+                                        tp_size(mesh)),
                                     fallback_channel=initial_ch,
                                     acceptance_prior=spec_acceptance)
         elif policy is None and spec_auto:
@@ -207,9 +224,10 @@ class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
         self._cloud = jax.jit(self._cloud_impl)
         self._edge_prefill = _jit_phase(self._edge_prefill_impl, donate=(3,))
         self._cloud_prefill = _jit_phase(self._cloud_prefill_impl,
-                                         donate=(4,))
+                                         donate=(4,), mesh=mesh)
         self._edge_decode = _jit_phase(self._edge_decode_impl, donate=(3,))
-        self._cloud_decode = _jit_phase(self._cloud_decode_impl, donate=(4,))
+        self._cloud_decode = _jit_phase(self._cloud_decode_impl, donate=(4,),
+                                        mesh=mesh)
         if self._spec_max > 1:
             self._draft_prefill = _jit_phase(self._draft_prefill_impl,
                                              donate=(3,))
@@ -280,6 +298,10 @@ class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
                 self._draft_cache = TF.init_cache(
                     cfg, self.max_batch, self.max_len, layers=self.n_cloud,
                     quantized=self.edge_int8)
+        if self.mesh is not None:
+            # TP-shard the cloud half, replicate the edge half — one
+            # placement pass per (re-)partition (serve.sharding)
+            place_collab_engine(self)
         if count:
             self.stats.cut_switches += 1
 
@@ -288,25 +310,24 @@ class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
             return False
         d = self.policy.decide(self.telemetry, cut=self.cut,
                                spec_k=self.spec_k)
-        hold = False
         if d.spec_k != self.spec_k:
             if self.policy.k_between_requests_only and n_active > 0:
                 pass                 # defer to the next drained tick
-            elif d.spec_k > 1 and self.spec_k == 1 and n_active > 0:
-                # draft-cache coherence barrier: k=1 rounds run the cheap
-                # serial step and leave the draft cache stale for the
-                # *live* requests, so a raise drains them first — requests
-                # admitted under spec_k > 1 draft-prefill at admission and
-                # every k>1↔k>1 or lowering switch stays immediate
-                hold = True
             else:
+                if d.spec_k > 1 and self.spec_k == 1 and n_active > 0:
+                    # k=1 rounds run the cheap serial step and leave the
+                    # draft cache stale for the *live* slots: rebuild it
+                    # from their committed prefix state instead of
+                    # paying the old drain barrier (serve.spec)
+                    self._rebuild_draft_caches()
                 self.spec_k = d.spec_k
                 self.stats.spec_k_switches += 1
         if d.cut != self.cut:
             if n_active:
+                self.stats.policy_holds += 1
                 return True          # re-partition barrier: drain first
             self._set_cut(d.cut)
-        return hold
+        return False
 
     def _round_headroom(self) -> int:
         return self._spec_max - 1
@@ -502,57 +523,4 @@ class CollaborativeServingEngine(_SpecDraftMixin, _OverloadMixin,
         return sum(v.size * v.dtype.itemsize
                    for v in self._edge_cache.values())
 
-    # -- seed recompute path (kept as the benchmark baseline) ----------------
-    def _edge_impl(self, blocks, embed, tokens):
-        cfg = self.cfg
-        x = ML.embed(embed, tokens).astype(cfg.dtype)
-        rope = ML.rope_table(tokens.shape[1], cfg.hd, base=cfg.rope_base,
-                             dtype=cfg.dtype)
-        x, _ = TF.run_blocks(blocks, x, cfg, rope=rope, qctx=self._edge_qctx)
-        return x
-
-    def _cloud_impl(self, blocks, tail, h):
-        cfg = self.cfg
-        rope = ML.rope_table(h.shape[1], cfg.hd, base=cfg.rope_base,
-                             dtype=cfg.dtype)
-        h, _ = TF.run_blocks(blocks, h, cfg, rope=rope)
-        return TF.lm_head(tail, h)
-
-    def forward(self, tokens: np.ndarray) -> jax.Array:
-        """Mixed-precision collaborative forward → logits [B, S, V]
-        (cache-less: re-runs the whole split stack; the seed path)."""
-        toks = jnp.asarray(tokens, jnp.int32)
-        h = self._edge(self.edge_blocks, self.embed, toks)
-        if self.a_bits is None:
-            blob = h.astype(jnp.float32)
-        else:
-            # Eq.(1): quantize boundary blob for the wire
-            qp = compute_qparams(h, bits=self.a_bits)
-            blob = quantize(h, qp)
-            h = dequantize(blob, qp).astype(self.cfg.dtype)   # Eq.(2)
-        # raw total-bytes accounting (no phase split — the seed path
-        # predates the prefill/decode breakdown and tests pin its totals)
-        nbytes = blob.size * blob.dtype.itemsize + _QP_BYTES + _MSG_BYTES
-        t = self.transport.channel.transfer_time(nbytes)
-        self.telemetry.observe_transfer(nbytes, t)
-        self.stats.transmitted_bytes += int(nbytes)
-        self.stats.channel_latency_s += t
-        return self._cloud(self.cloud_blocks, self.tail,
-                           h.astype(self.cfg.dtype))
-
-    def generate_recompute(self, prompts: List[np.ndarray], *,
-                           max_new_tokens: int = 8) -> List[List[int]]:
-        """Seed greedy decode: re-run the split forward on the full,
-        growing sequence every step (KV-less edge, O(S²·L) per token and
-        the whole boundary blob retransmitted).  Kept as the baseline the
-        incremental path is benchmarked against."""
-        toks = np.stack(prompts).astype(np.int32)
-        out = [[] for _ in prompts]
-        for _ in range(max_new_tokens):
-            logits = self.forward(toks)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            for j, t in enumerate(nxt):
-                out[j].append(int(t))
-            toks = np.concatenate([toks, nxt[:, None].astype(np.int32)], 1)
-            self.stats.decode_steps += 1
-        return out
+    # seed recompute path (forward / generate_recompute): serve.seedpath

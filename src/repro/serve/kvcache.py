@@ -178,6 +178,15 @@ class _PagedPool:
         # in flight — sharing it would race
         return jnp.array(self.bt[np.asarray(slots)][:, :width], copy=True)
 
+    def rows(self, slots: Sequence[int], padded_len: int) -> jax.Array:
+        """Current block-table rows for ``slots``, trimmed like ``admit``
+        to the pages a ``padded_len``-position replay can touch — for
+        rebuilding a cache over positions the slots already own (the
+        draft-cache rebuild on a warm k raise).  Copied, never aliased,
+        for the same async-mutation reason as ``admit``."""
+        width = max(1, _cdiv(int(padded_len), self.page_size))
+        return jnp.array(self.bt[np.asarray(slots)][:, :width], copy=True)
+
     def pages_held(self, slot: int) -> int:
         return len(self._slot_pages.get(int(slot), ()))
 

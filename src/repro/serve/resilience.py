@@ -97,10 +97,13 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
                                           donate=(5, 6))
         self._edge_only_admit = _jit_phase(self._edge_only_prefill_impl,
                                            donate=(4,))
+        # resync replays run the cloud suffix — under the mesh when TP'd
         self._resync_replay = _jit_phase(self._resync_replay_impl,
-                                         donate=(2,))
+                                         donate=(2,),
+                                         mesh=getattr(self, "mesh", None))
         self._resync_prefill = _jit_phase(self._resync_prefill_impl,
-                                          donate=(2,))
+                                          donate=(2,),
+                                          mesh=getattr(self, "mesh", None))
         self.cloud_down = False
         self._down_since: Optional[float] = None
         self._rounds_down = 0

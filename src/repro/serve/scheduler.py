@@ -43,16 +43,30 @@ def _bucket_len(plen: int, max_len: int) -> int:
     return min(b, max_len)
 
 
-def _jit_phase(fn, donate: Tuple[int, ...] = ()):
+def _jit_phase(fn, donate: Tuple[int, ...] = (), mesh=None):
     """``jax.jit`` with the KV-cache argument(s) donated, so the page-pool
     scatter of every prefill/decode/verify updates the cache *in place*
     on TPU/GPU instead of doubling resident cache bytes per step.  The
     engines always consume the returned cache and never touch the donated
     buffer again, so donation is safe.  XLA:CPU ignores donation and
-    warns per call, so off-accelerator we jit plain."""
+    warns per call, so off-accelerator we jit plain.
+
+    ``mesh`` makes the phase a mesh-jitted computation: the call runs
+    under the mesh context, and GSPMD propagates the committed input
+    shardings (the TP-placed suffix weights and KV pool — see
+    ``serve.sharding``) through the whole phase."""
     if donate and jax.default_backend() in ("tpu", "gpu"):
-        return jax.jit(fn, donate_argnums=donate)
-    return jax.jit(fn)
+        jf = jax.jit(fn, donate_argnums=donate)
+    else:
+        jf = jax.jit(fn)
+    if mesh is None:
+        return jf
+
+    def mesh_call(*args, **kwargs):
+        with mesh:
+            return jf(*args, **kwargs)
+
+    return mesh_call
 
 
 @dataclasses.dataclass
@@ -124,7 +138,11 @@ class _SlotEngine:
         self.timed = timed
         self.stats = ServeStats()
         self.trace_counts = {"prefill": 0, "decode": 0, "spec_draft": 0,
-                             "verify": 0, "edge_only": 0, "resync": 0}
+                             "verify": 0, "edge_only": 0, "resync": 0,
+                             "draft_rebuild": 0}
+        # populated by _run while a generate call is live (see there)
+        self._sched_active = None
+        self._sched_committed = None
 
     # -- subclass interface -------------------------------------------------
     def _admit(self, toks: jax.Array, plens: np.ndarray, max_news: np.ndarray,
@@ -319,6 +337,13 @@ class _SlotEngine:
             return (np.concatenate(chunks).astype(np.int32) if chunks
                     else np.zeros((0,), np.int32))
 
+        # live view for engine hooks that rebuild per-slot device state
+        # mid-run (e.g. the draft-cache rebuild on a warm k raise): the
+        # active map plus the one host sync that recovers a live slot's
+        # committed tokens
+        self._sched_active = active
+        self._sched_committed = parked_tokens
+
         def preempt(slot: int) -> None:
             r, _c = active.pop(slot)
             r._parked = parked_tokens(r)
@@ -508,6 +533,8 @@ class _SlotEngine:
                 committed = sum(n for _, _, n in takes)
                 self.stats.decode_tokens += committed
                 self._after_round(len(takes), committed)
+        self._sched_active = None
+        self._sched_committed = None
         # single device→host transfer for the whole run
         if not rounds:
             return  # everything shed before a single token committed

@@ -1,0 +1,81 @@
+"""Seed (cache-less) recompute path of the collaborative engine.
+
+``forward``/``generate_recompute`` re-run the whole split stack on the
+full, growing sequence every step — the PR-0 behavior kept verbatim as
+the baseline the incremental paged path is benchmarked against.  Split
+out of ``serve.engine`` purely for the package's module-size contract;
+the methods mix back into ``CollaborativeServingEngine`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import compute_qparams, dequantize, quantize
+from repro.models import layers as ML
+from repro.models import transformer as TF
+from repro.serve.transport import _MSG_BYTES, _QP_BYTES
+
+__all__ = ["_SeedPathMixin"]
+
+
+class _SeedPathMixin:
+    """The cache-less split forward + greedy recompute decode (the seed
+    baseline), mixed into ``CollaborativeServingEngine``."""
+
+    def _edge_impl(self, blocks, embed, tokens):
+        cfg = self.cfg
+        x = ML.embed(embed, tokens).astype(cfg.dtype)
+        rope = ML.rope_table(tokens.shape[1], cfg.hd, base=cfg.rope_base,
+                             dtype=cfg.dtype)
+        x, _ = TF.run_blocks(blocks, x, cfg, rope=rope, qctx=self._edge_qctx)
+        return x
+
+    def _cloud_impl(self, blocks, tail, h):
+        cfg = self.cfg
+        rope = ML.rope_table(h.shape[1], cfg.hd, base=cfg.rope_base,
+                             dtype=cfg.dtype)
+        h, _ = TF.run_blocks(blocks, h, cfg, rope=rope)
+        return TF.lm_head(tail, h)
+
+    def forward(self, tokens: np.ndarray) -> jax.Array:
+        """Mixed-precision collaborative forward → logits [B, S, V]
+        (cache-less: re-runs the whole split stack; the seed path)."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        h = self._edge(self.edge_blocks, self.embed, toks)
+        if self.a_bits is None:
+            blob = h.astype(jnp.float32)
+        else:
+            # Eq.(1): quantize boundary blob for the wire
+            qp = compute_qparams(h, bits=self.a_bits)
+            blob = quantize(h, qp)
+            h = dequantize(blob, qp).astype(self.cfg.dtype)   # Eq.(2)
+        # raw total-bytes accounting (no phase split — the seed path
+        # predates the prefill/decode breakdown and tests pin its totals)
+        nbytes = blob.size * blob.dtype.itemsize + _QP_BYTES + _MSG_BYTES
+        t = self.transport.channel.transfer_time(nbytes)
+        self.telemetry.observe_transfer(nbytes, t)
+        self.stats.transmitted_bytes += int(nbytes)
+        self.stats.channel_latency_s += t
+        return self._cloud(self.cloud_blocks, self.tail,
+                           h.astype(self.cfg.dtype))
+
+    def generate_recompute(self, prompts: List[np.ndarray], *,
+                           max_new_tokens: int = 8) -> List[List[int]]:
+        """Seed greedy decode: re-run the split forward on the full,
+        growing sequence every step (KV-less edge, O(S²·L) per token and
+        the whole boundary blob retransmitted).  Kept as the baseline the
+        incremental path is benchmarked against."""
+        toks = np.stack(prompts).astype(np.int32)
+        out = [[] for _ in prompts]
+        for _ in range(max_new_tokens):
+            logits = self.forward(toks)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for j, t in enumerate(nxt):
+                out[j].append(int(t))
+            toks = np.concatenate([toks, nxt[:, None].astype(np.int32)], 1)
+            self.stats.decode_steps += 1
+        return out

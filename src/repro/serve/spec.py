@@ -50,12 +50,13 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quant import dequantize
 from repro.models import layers as ML
 from repro.models import transformer as TF
 from repro.serve.kvcache import _paged_prefill_merge, _paged_prefill_view
-from repro.serve.scheduler import _jit_phase
+from repro.serve.scheduler import _bucket_len, _jit_phase
 
 
 class _SpecDraftMixin:
@@ -67,7 +68,8 @@ class _SpecDraftMixin:
         if k not in self._spec_jits:
             draft = _jit_phase(partial(self._spec_draft_impl, k),
                                donate=(5, 6))
-            verify = _jit_phase(partial(self._verify_impl, k), donate=(6,))
+            verify = _jit_phase(partial(self._verify_impl, k), donate=(6,),
+                                mesh=getattr(self, "mesh", None))
             self._spec_jits[k] = (draft, verify)
         return self._spec_jits[k]
 
@@ -131,6 +133,75 @@ class _SpecDraftMixin:
             jax.lax.scan(step, (cur, pos, e_cache, d_cache), None,
                          length=k)
         return blobs, scales, zps, drafts, e_cache, d_cache
+
+    def _draft_rebuild_impl(self, edge_blocks, draft_blocks, embed, toks,
+                            d_cache, slots, bt_rows, plens):
+        """Recompute the draft suffix K/V for live slots from committed
+        prefix state: re-run the committed rows (prompt + committed
+        tokens) through the edge prefix over a *throwaway* dense scratch
+        cache — the real edge cache already holds these positions and
+        must not be touched — then replay the boundary blob through the
+        draft suffix exactly like a draft prefill.  Draft contents only
+        steer the acceptance rate, never the committed stream, so the
+        dense-scratch attention path is safe here."""
+        self.trace_counts["draft_rebuild"] += 1
+        cfg = self.cfg
+        n, s = toks.shape
+        x = ML.embed(embed, toks).astype(cfg.dtype)
+        scratch = TF.init_cache(cfg, n, self.max_len, layers=self.n_edge,
+                                quantized=self.edge_int8)
+        h, _ = TF.run_blocks(edge_blocks, x, cfg, rope=self._rope(),
+                             cache=scratch, cache_index=jnp.int32(0),
+                             qctx=self._edge_qctx)
+        ranged = jnp.where(jnp.arange(s)[None, :, None] <
+                           plens[:, None, None], h, h[:, :1])
+        blob, qp = self._quant_boundary(h, ranged)
+        return self._draft_prefill_impl(draft_blocks, blob, qp, d_cache,
+                                        slots, bt_rows, plens)
+
+    def _rebuild_draft_caches(self) -> None:
+        """Host driver for a warm k raise (satellite of the mesh PR):
+        instead of draining the live slots — whose draft caches were
+        never filled during k=1 rounds — rebuild each slot's draft K/V
+        from its committed prefix (prompt + committed tokens minus the
+        not-yet-processed last one), bucketing rows like admission so
+        trace shapes stay bounded."""
+        live = self._sched_active
+        if not live:
+            return
+        if not hasattr(self, "_draft_rebuild"):
+            self._draft_rebuild = _jit_phase(self._draft_rebuild_impl,
+                                             donate=(4,))
+        slots = sorted(live)
+        rows = []
+        for s in slots:
+            r, _c = live[s]
+            committed = self._sched_committed(r)
+            rows.append(np.concatenate([np.asarray(r.prompt, np.int32),
+                                        committed[:-1].astype(np.int32)]))
+        order = sorted(range(len(slots)), key=lambda i: len(rows[i]))
+        i = 0
+        while i < len(order):
+            bucket = _bucket_len(len(rows[order[i]]), self.max_len)
+            grp = [order[i]]
+            i += 1
+            while i < len(order) and _bucket_len(
+                    len(rows[order[i]]), self.max_len) == bucket:
+                grp.append(order[i])
+                i += 1
+            toks = np.zeros((len(grp), bucket), np.int32)
+            for j, g in enumerate(grp):
+                toks[j, :len(rows[g])] = rows[g]
+            plens = np.asarray([len(rows[g]) for g in grp], np.int32)
+            gslots = np.asarray([slots[g] for g in grp], np.int32)
+            bt_rows = None
+            if self._pool is not None:
+                bt_rows = self._pool.rows(gslots, bucket)
+            self._draft_cache = self._draft_rebuild(
+                self.edge_blocks, self.draft_blocks, self.embed,
+                jnp.asarray(toks), self._draft_cache, jnp.asarray(gslots),
+                bt_rows, jnp.asarray(plens))
+        self.stats.draft_rebuilds += 1
 
     # -- degradation phases (serve.resilience) ------------------------------
     def _edge_only_step_impl(self, edge_blocks, draft_blocks, embed, tail,

@@ -105,6 +105,12 @@ class ServeStats:
     # online re-tuning events (serve.policy)
     spec_k_switches: int = 0
     cut_switches: int = 0
+    # warm k-raise path: ``draft_rebuilds`` counts draft-cache rebuilds
+    # from committed prefix state (raising out of k=1 with live slots no
+    # longer drains); ``policy_holds`` counts scheduler turns admission
+    # actually paused on a policy barrier (now only cut re-partitions)
+    draft_rebuilds: int = 0
+    policy_holds: int = 0
     # reliability layer (serve.faults / ReliableTransport / resilience)
     retries: int = 0
     timeouts: int = 0
@@ -163,6 +169,8 @@ class ServeStats:
             "acceptance_rate": self.acceptance_rate(),
             "spec_k_switches": self.spec_k_switches,
             "cut_switches": self.cut_switches,
+            "draft_rebuilds": self.draft_rebuilds,
+            "policy_holds": self.policy_holds,
             "channel_latency_s": self.channel_latency_s,
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,

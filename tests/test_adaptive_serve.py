@@ -373,6 +373,29 @@ def test_mid_stream_cut_switch_drains_then_repartitions(
     assert got == ref
 
 
+def test_warm_k_raise_rebuilds_drafts_without_draining(
+        params, adaptive_fp_engine, fixed_fp_engines):
+    """Raising k out of k=1 with live slots must NOT drain: the draft
+    caches — stale after serial k=1 rounds — are rebuilt in place from
+    committed prefix state, the stream stays bit-exact greedy, and the
+    scheduler never holds admission on a re-partition barrier (the cut
+    is unchanged)."""
+    eng = adaptive_fp_engine
+    _reset(eng, ScriptedPolicy(2, 0, 4), cut=0, spec_k=1)
+    base = {f: getattr(eng.stats, f) for f in
+            ("spec_k_switches", "draft_rebuilds", "policy_holds",
+             "cut_switches")}                # module-scoped engine: deltas
+    prompts = _prompts((7, 9, 8, 15), seed=11)
+    got = eng.generate(prompts, max_new_tokens=6)
+    assert eng.stats.spec_k_switches > base["spec_k_switches"]
+    assert eng.spec_k == 4
+    assert eng.stats.draft_rebuilds == base["draft_rebuilds"] + 1
+    assert eng.stats.policy_holds == base["policy_holds"]  # zero drains paid
+    assert eng.stats.cut_switches == base["cut_switches"]
+    ref = fixed_fp_engines[0].generate(prompts, max_new_tokens=6)
+    assert got == ref
+
+
 def test_policy_engine_draftless_k1_wire_is_unchanged(params):
     """A policy engine idling at k=1 must charge exactly the serial
     step's bytes (the draft machinery is provisioned but idle)."""

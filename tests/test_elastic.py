@@ -22,10 +22,11 @@ SCRIPT = textwrap.dedent("""
     from repro.models import layers as L
     from repro.train.optim import AdamWConfig, adamw_init, adamw_update
 
+    from repro.launch.mesh import _mk_mesh
+
     def make_mesh(data, model):
-        return jax.make_mesh((data, model), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-            devices=jax.devices()[: data * model])
+        return _mk_mesh((data, model), ("data", "model"),
+                        devices=jax.devices()[: data * model])
 
     key = jax.random.PRNGKey(0)
     params = {"l1": L.dense_init(key, 16, 32),

@@ -117,8 +117,8 @@ def test_checkpoint_retention_and_latest(tmp_path):
 def test_checkpoint_restore_to_different_sharding(tmp_path):
     """Elastic restart: leaves restore onto any current-mesh sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mk_mesh
+    mesh = _mk_mesh((1,), ("data",))
     tree = {"w": jnp.arange(8.0)}
     save_checkpoint(tmp_path, 1, tree)
     sh = {"w": NamedSharding(mesh, P("data"))}
