@@ -1,0 +1,240 @@
+"""Fleet serving benchmark: N tenant edges on one shared cloud engine.
+
+Four simulated edges — heterogeneous links, identical (cut, spec_k) so
+their rounds coalesce — stream staggered request waves at the cloud two
+ways:
+
+* ``fleet`` — one ``FleetServingEngine`` (max_batch = 8, one shared
+  ``_CutBank`` / KV page pool): every scheduler turn verifies ALL
+  tenants' due drafts in ONE batched ``paged_flash_mq`` call;
+* ``independent`` — four separate ``CollaborativeServingEngine``s
+  (max_batch = 2, a quarter of the page pool each — the same aggregate
+  hardware budget), each serving one tenant's stream, run back to back
+  on the same host.
+
+Both sides run the identical workload through an untimed warm-up pass
+that compiles every phase shape, then ``REPS`` timed replays (fresh
+channels/stats each) of which the best (minimum) wall is reported — so
+the headline measures dispatch and batching, not XLA compiles or host
+scheduler jitter.  **Aggregate throughput** is total committed tokens
+over host wall-clock; the fleet's win is issuing ~N-fold fewer phase dispatches
+per round (``round_calls`` vs the independents' summed
+``decode_steps``).  Per-tenant request latency (p50/p99 of
+``finish_s - arrival_s`` on each tenant's own simulated clock) is
+reported for both sides — cross-tenant batching must not buy
+throughput with tail latency.
+
+Headline for the drift guard: ``aggregate_speedup_vs_independent``
+(the ISSUE's acceptance bar is >= 1.5x at N = 4).  A lossless
+(``a_bits=None``) fleet-vs-solo bit-identity check rides along.
+
+    PYTHONPATH=src python -m benchmarks.fleet_serve
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.costmodel import Channel
+from repro.models.transformer import LMConfig, init_lm
+from repro.serve import (CollaborativeServingEngine, FaultyChannel,
+                         FleetServingEngine, Request, ServeStats,
+                         TenantSpec)
+
+OUT = Path("BENCH_fleet_serve.json")
+
+CFG = LMConfig(name="fleet-bench-lm", n_layers=3, d_model=32, n_heads=4,
+               n_kv=2, d_ff=64, vocab=64, max_seq=64, remat=False)
+CUT = 1
+K = 4                    # shared draft length -> rounds coalesce
+PLEN = 9
+NEW = 32
+PAGE = 8
+MAXLEN = 64
+REPS = 3                 # timed replays per side; best (min) wall wins
+# heterogeneous last hops, one per tenant (kbps, rtt_ms)
+LINKS = [(2000, 20), (1000, 40), (500, 60), (250, 80)]
+
+
+def _channels(seed: int = 0):
+    """Fresh per-tenant clocked channels (fault-free ``FaultyChannel``
+    wrappers: deterministic, but they own a simulated clock, which the
+    plain ``Channel`` does not)."""
+    return {f"edge{i}": FaultyChannel(Channel.from_kbps(bw, rtt_ms=rtt),
+                                      seed=seed + i)
+            for i, (bw, rtt) in enumerate(LINKS)}
+
+
+def _traffic(n_req: int, gap: float, seed: int):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i,
+                    prompt=rng.randint(0, CFG.vocab, PLEN).astype(np.int32),
+                    max_new_tokens=NEW, arrival_s=i * gap)
+            for i in range(n_req)]
+
+
+def _latency(reqs):
+    lats = [r.finish_s - r.arrival_s for r in reqs if r.finish_s is not None]
+    return {"p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,
+            "p99_latency_s": float(np.percentile(lats, 99)) if lats else 0.0}
+
+
+def _run_fleet(params, n_req: int, gap: float):
+    chans = _channels()
+    fleet = FleetServingEngine(
+        params, CFG,
+        [TenantSpec(name, ch, cut_layer=CUT, spec_k=K)
+         for name, ch in chans.items()],
+        max_batch=2 * len(chans), max_len=MAXLEN, page_size=PAGE)
+    # warm-up pass: identical traffic, so the timed passes replay the
+    # exact group-size/bucket sequence through already-compiled phases
+    fleet.generate_requests({name: _traffic(n_req, gap, seed=10 + i)
+                             for i, name in enumerate(chans)})
+    best = None
+    for _rep in range(REPS):
+        for i, (name, t) in enumerate(fleet._tenants.items()):
+            t.transport.channel = _channels()[name]
+            t.stats = ServeStats()
+            fleet.fairness.vservice[name] = 0.0
+        fleet.round_calls = 0
+        reqs = {name: _traffic(n_req, gap, seed=10 + i)
+                for i, name in enumerate(chans)}
+        t0 = time.perf_counter()
+        fleet.generate_requests(reqs)
+        wall = time.perf_counter() - t0
+        per_tenant = {}
+        for name, rl in reqs.items():
+            t = fleet.tenant(name)
+            per_tenant[name] = {
+                **_latency(rl),
+                "tokens": sum(len(r.out_tokens) for r in rl),
+                "sim_s": t.now(),
+                "wire_bytes": t.stats.transmitted_bytes,
+            }
+        tokens = sum(p["tokens"] for p in per_tenant.values())
+        snap = {"wall_s": wall, "tokens": tokens,
+                "tokens_per_s_wall": tokens / max(wall, 1e-9),
+                "round_dispatches": fleet.round_calls,
+                "pool_utilization_peak": fleet.stats.pool_utilization_peak,
+                "per_tenant": per_tenant}
+        if best is None or wall < best["wall_s"]:
+            best = snap
+    return best
+
+
+def _run_independent(params, n_req: int, gap: float):
+    chans = _channels()
+    engines = {}
+    for name, ch in chans.items():
+        engines[name] = CollaborativeServingEngine(
+            params, CFG, cut_layer=CUT, channel=ch, spec_k=K,
+            max_batch=2, max_len=MAXLEN, page_size=PAGE)
+    # warm-up pass per engine (each owns its own jitted phases)
+    for i, (name, eng) in enumerate(engines.items()):
+        eng.generate_requests(_traffic(n_req, gap, seed=10 + i))
+    best = None
+    for _rep in range(REPS):
+        per_tenant = {}
+        wall = 0.0
+        dispatches = 0
+        for i, (name, eng) in enumerate(engines.items()):
+            eng.transport.channel = _channels()[name]
+            eng.stats = ServeStats()
+            reqs = _traffic(n_req, gap, seed=10 + i)
+            t0 = time.perf_counter()
+            eng.generate_requests(reqs)
+            wall += time.perf_counter() - t0
+            dispatches += eng.stats.decode_steps
+            per_tenant[name] = {
+                **_latency(reqs),
+                "tokens": sum(len(r.out_tokens) for r in reqs),
+                "sim_s": float(eng.channel.clock_s),
+                "wire_bytes": eng.stats.transmitted_bytes,
+            }
+        tokens = sum(p["tokens"] for p in per_tenant.values())
+        snap = {"wall_s": wall, "tokens": tokens,
+                "tokens_per_s_wall": tokens / max(wall, 1e-9),
+                "round_dispatches": dispatches,
+                "per_tenant": per_tenant}
+        if best is None or wall < best["wall_s"]:
+            best = snap
+    return best
+
+
+def _lossless_identity(params, print_fn) -> bool:
+    """Two tenants at *different* cuts over one shared bank, lossless:
+    each tenant's fleet stream must be bit-identical to the same tenant
+    served alone on a solo engine."""
+    fp = dict(a_bits=None, edge_int8=False, cloud_int8=False,
+              max_len=MAXLEN, page_size=PAGE)
+    rng = np.random.RandomState(3)
+    prompts = {n: [rng.randint(0, CFG.vocab, PLEN).astype(np.int32)
+                   for _ in range(3)] for n in ("a", "b")}
+    fleet = FleetServingEngine(
+        params, CFG,
+        [TenantSpec("a", Channel.from_kbps(2000, rtt_ms=20), cut_layer=0,
+                    spec_k=1),
+         TenantSpec("b", Channel.from_kbps(500, rtt_ms=50), cut_layer=1,
+                    spec_k=K)],
+        max_batch=4, **fp)
+    got = fleet.generate(prompts, max_new_tokens=12)
+    ok = True
+    for name, cut, k, kbps, rtt in [("a", 0, 1, 2000, 20),
+                                    ("b", 1, K, 500, 50)]:
+        solo = CollaborativeServingEngine(
+            params, CFG, cut_layer=cut, spec_k=k,
+            channel=Channel.from_kbps(kbps, rtt_ms=rtt), max_batch=4, **fp)
+        ok = ok and got[name] == solo.generate(prompts[name],
+                                               max_new_tokens=12)
+    print_fn(f"lossless fleet-vs-solo bit-identity: {ok}")
+    return ok
+
+
+def run(print_fn=print, quick: bool = False) -> dict:
+    n_req = 3 if quick else 6
+    gap = 0.2
+    params = init_lm(jax.random.PRNGKey(0), CFG)
+    print_fn(f"{len(LINKS)} tenants x {n_req} req x {NEW} tok "
+             f"(cut={CUT}, k={K}), links "
+             + ", ".join(f"{bw}kbps/{rtt}ms" for bw, rtt in LINKS))
+
+    fleet = _run_fleet(params, n_req, gap)
+    indep = _run_independent(params, n_req, gap)
+    speedup = fleet["tokens_per_s_wall"] / max(indep["tokens_per_s_wall"],
+                                               1e-9)
+    for name, r in [("fleet", fleet), ("independent", indep)]:
+        p99 = max(p["p99_latency_s"] for p in r["per_tenant"].values())
+        print_fn(f"{name:>12}: {r['tokens']} tok in {r['wall_s']:.2f}s wall "
+                 f"({r['tokens_per_s_wall']:7.1f} tok/s), "
+                 f"{r['round_dispatches']} round dispatches, "
+                 f"worst p99 latency {p99:.2f}s")
+    print_fn(f"aggregate speedup vs independent: {speedup:.2f}x "
+             f"(dispatch ratio "
+             f"{indep['round_dispatches'] / max(fleet['round_dispatches'], 1):.1f}x)")
+    ok = _lossless_identity(params, print_fn)
+
+    result = {
+        "config": {"model": CFG.name, "cut": CUT, "spec_k": K,
+                   "tenants": len(LINKS),
+                   "links_kbps_rtt_ms": LINKS, "prompt_len": PLEN,
+                   "max_new": NEW, "n_req_per_tenant": n_req,
+                   "arrival_gap_s": gap, "page_size": PAGE,
+                   "max_len": MAXLEN, "quick": quick},
+        "fleet": fleet,
+        "independent": indep,
+        "aggregate_speedup_vs_independent": speedup,
+        "dispatch_ratio": indep["round_dispatches"]
+        / max(fleet["round_dispatches"], 1),
+        "fleet_lossless_bit_identical": ok,
+    }
+    OUT.write_text(json.dumps(result, indent=1))
+    print_fn(f"-> {OUT}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

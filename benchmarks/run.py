@@ -13,6 +13,11 @@ the **benchmark-drift guard**: fresh quick-mode numbers are compared
 against the committed ``BENCH_*.json`` headline metrics, and the
 process exits non-zero on a >2x regression of any tracked metric —
 CI catches a perf cliff, not just a crash.
+
+A crashing section no longer aborts the run: every section executes,
+all section errors AND all drift regressions are reported together at
+the end (single non-zero exit), and an absent or unreadable tracked
+``BENCH_*.json`` prints a clear skip line instead of tracebacking.
 """
 from __future__ import annotations
 
@@ -34,8 +39,28 @@ DRIFT_TRACKED = {
     "BENCH_overload_serve.json": ["goodput_vs_naive",
                                   "priority_ontime_frac"],
     "BENCH_sharded_serve.json": ["speedup_vs_1dev.4"],
+    "BENCH_fleet_serve.json": ["aggregate_speedup_vs_independent",
+                               "dispatch_ratio"],
 }
 DRIFT_RATIO = 2.0
+
+
+def _load_tracked(print_fn=print) -> dict:
+    """Read every tracked ``BENCH_*.json`` that exists; an absent or
+    unparseable file gets a clear skip line instead of a traceback (the
+    drift guard then treats it as not baselined)."""
+    out = {}
+    for fname in DRIFT_TRACKED:
+        p = Path(fname)
+        if not p.exists():
+            print_fn(f"skip {fname}: absent (run the full benchmark once "
+                     f"to baseline it)")
+            continue
+        try:
+            out[fname] = json.loads(p.read_text())
+        except ValueError as e:
+            print_fn(f"skip {fname}: unreadable JSON ({e})")
+    return out
 
 
 def _lookup(d, dotted: str):
@@ -76,17 +101,18 @@ def check_drift(committed: dict, fresh: dict,
 
 def main(quick: bool = False) -> None:
     from benchmarks import (adaptive_serve, chaos_serve, collab_decode,
-                            fig3_breakdown, kernel_bench, optimized_decode,
-                            overload_serve, paged_decode, roofline,
-                            sharded_serve, spec_decode, table3_partition,
-                            table12_transmission)
+                            fig3_breakdown, fleet_serve, kernel_bench,
+                            optimized_decode, overload_serve, paged_decode,
+                            roofline, sharded_serve, spec_decode,
+                            table3_partition, table12_transmission)
 
     # snapshot the committed headline numbers before any section
     # rewrites its BENCH file
-    committed = {f: json.loads(Path(f).read_text())
-                 for f in DRIFT_TRACKED if Path(f).exists()}
+    print("=== committed BENCH baselines " + "=" * 38)
+    committed = _load_tracked()
 
     csv_rows = []
+    errors = []
 
     def section(name, fn, derived_fn, *, heavy: bool = False):
         # resolve the callable eagerly even when skipping: registration
@@ -98,10 +124,20 @@ def main(quick: bool = False) -> None:
             return None
         print(f"\n=== {name} " + "=" * max(1, 66 - len(name)))
         t0 = time.perf_counter()
-        result = fn()
-        us = (time.perf_counter() - t0) * 1e6
-        csv_rows.append((name, us, derived_fn(result)))
-        return result
+        # a crashing section must not abort the run: later sections and
+        # the drift guard still execute, and ALL failures are reported
+        # together at the end
+        try:
+            result = fn()
+            csv_rows.append((name, (time.perf_counter() - t0) * 1e6,
+                             derived_fn(result)))
+            return result
+        except Exception as e:          # noqa: BLE001 - collected, re-raised
+            print(f"ERROR in {name}: {type(e).__name__}: {e}")
+            errors.append(f"{name}: {type(e).__name__}: {e}")
+            csv_rows.append((name, (time.perf_counter() - t0) * 1e6,
+                             "ERROR"))
+            return None
 
     section("table1_2_transmission", table12_transmission.run,
             lambda r: f"inception_rows={len(r['Table1'])};"
@@ -168,28 +204,41 @@ def main(quick: bool = False) -> None:
                       f"lossless_bit_identical={r['lossless_bit_identical']};"
                       f"kernel_parity={r['kernel_interpret_parity_ok']}")
 
+    section("fleet_serve", lambda: fleet_serve.run(quick=quick),
+            lambda r: f"aggregate_speedup="
+                      f"{r['aggregate_speedup_vs_independent']:.2f}x;"
+                      f"dispatch_ratio={r['dispatch_ratio']:.1f}x;"
+                      f"lossless_bit_identical="
+                      f"{r['fleet_lossless_bit_identical']}")
+
     print("\n=== CSV summary " + "=" * 52)
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.0f},{derived}")
 
+    failures = []
     if quick:
-        fresh = {f: json.loads(Path(f).read_text())
-                 for f in DRIFT_TRACKED if Path(f).exists()}
-        failures = check_drift(committed, fresh)
         print("\n=== benchmark drift guard " + "=" * 42)
-        if failures:
-            for f in failures:
-                print("FAIL", f)
-            raise SystemExit(1)
-        compared = sum(
-            1 for f, ms in DRIFT_TRACKED.items()
-            if f in committed and f in fresh
-            for m in ms
-            if _lookup(committed[f], m) is not None
-            and _lookup(fresh[f], m) is not None)
-        print(f"ok: {compared} tracked metrics within {DRIFT_RATIO}x "
-              f"of committed")
+        fresh = _load_tracked()
+        failures = check_drift(committed, fresh)
+        for f in failures:
+            print("FAIL", f)
+        if not failures:
+            compared = sum(
+                1 for f, ms in DRIFT_TRACKED.items()
+                if f in committed and f in fresh
+                for m in ms
+                if _lookup(committed[f], m) is not None
+                and _lookup(fresh[f], m) is not None)
+            print(f"ok: {compared} tracked metrics within {DRIFT_RATIO}x "
+                  f"of committed")
+
+    if errors or failures:
+        print(f"\n{len(errors)} section error(s), "
+              f"{len(failures)} drift regression(s)")
+        for e in errors:
+            print("ERROR", e)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

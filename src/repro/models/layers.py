@@ -41,6 +41,13 @@ class QuantCtx:
     w_bits: int = 8
     a_bits: int = 8
     per_channel: bool = True
+    # dynamic-mode activation range axis: None = one range per tensor
+    # (paper Eq.1 on a single stream); 0 = one range per leading-axis
+    # row.  Batched serving engines MUST use 0 — a per-tensor range over
+    # a multi-slot batch couples every request's lattice to its
+    # neighbours' (and to garbage in idle slots), breaking per-request
+    # determinism.  For B=1 the two are identical.
+    act_axis: Optional[int] = None
     scales: Optional[Dict[str, QuantParams]] = None     # static mode
     recorder: Optional[Dict[str, MinMaxCalibrator]] = None  # calib mode
     # weights already sit on the deployment lattice (prequantized once,
@@ -66,7 +73,7 @@ class QuantCtx:
             if qp is None:           # unseen activation: pass through
                 return x
         else:
-            qp = compute_qparams(x, bits=self.a_bits)
+            qp = compute_qparams(x, axis=self.act_axis, bits=self.a_bits)
         return fake_quant(x, qp)
 
     def finalize_calibration(self) -> Dict[str, QuantParams]:

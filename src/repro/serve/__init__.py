@@ -13,6 +13,9 @@ cloud-edge collaborative deployment, as a package of focused layers.
     engine      ``ServingEngine`` / ``CollaborativeServingEngine``
     resilience  ``ResilientCollaborativeEngine`` — edge-only graceful
                 degradation through outages + cloud KV resync
+    fleet       ``FleetServingEngine`` — N tenant edges on one shared
+                cloud engine: cross-tenant batched verify over one
+                weight bank / page pool, weighted-fair sharing
 
 ``repro.serve.engine`` re-exports the whole public surface, so both
 ``from repro.serve import X`` and the historical
@@ -26,10 +29,13 @@ from repro.serve.engine import (AdaptivePolicy, CollaborativeServingEngine,
                                 PressureSchedule, ReliableTransport, Request,
                                 ServeStats, ServingEngine, Transport)
 from repro.serve.faults import FaultOutcome
+from repro.serve.fleet import FleetServingEngine, TenantSpec
+from repro.serve.policy import FleetFairness
 from repro.serve.resilience import ResilientCollaborativeEngine
 
 __all__ = ["ServingEngine", "CollaborativeServingEngine",
-           "ResilientCollaborativeEngine", "PageAllocator", "PoolExhausted",
+           "ResilientCollaborativeEngine", "FleetServingEngine",
+           "TenantSpec", "FleetFairness", "PageAllocator", "PoolExhausted",
            "ServeStats", "Request", "Transport", "ReliableTransport",
            "CloudUnreachable", "LinkTelemetry", "DriftingChannel",
            "FaultyChannel", "FaultOutcome", "PressureSchedule",

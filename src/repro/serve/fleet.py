@@ -1,0 +1,722 @@
+"""Multi-edge fleet serving: one shared cloud engine, N tenant edges.
+
+The paper's auto-tuner picks one partition for one device/network
+snapshot; JointDNN (arXiv:1801.08618) frames the decision as
+per-device/per-network-state, and Shared Mobile-Cloud Inference
+(arXiv:2002.00157) amortizes shared cloud compute across many mobile
+clients.  ``FleetServingEngine`` makes both concrete: it admits request
+streams from many *simulated edges* (tenants), each owning its own
+channel (``Channel``/``DriftingChannel``/``FaultyChannel``), its own
+``LinkTelemetry`` + ``ServeStats``, and its own ``(cut_layer, spec_k)``
+served out of **one shared prequantized ``_CutBank``** — no per-tenant
+weight copies — over **one shared slot table and KV page pool**.
+
+The perf headline is the cross-tenant batched verify: every scheduler
+turn groups the live slots by ``(cut, spec_k)`` and advances each group
+with **one** phase call spanning the whole slot axis — one edge
+draft scan, one uplink charge per tenant, one batched
+``paged_flash_mq`` verify step over the shared ``_PagedPool`` — so N
+tenants' rounds cost one compiled dispatch per group instead of one
+per tenant.  Tenants at different cuts verify through their own suffix
+slice (a per-cut ``_CutRuntime``: jitted phases + split caches over
+the *same* pool geometry) but share the slot/page tables; slots riding
+along in another group's call are masked to the allocator's dump page
+(``_PagedPool.table_for``), the same convention the resync replay
+established, so per-slot streams stay independent — in lossless
+``a_bits=None`` mode a tenant's fleet stream is bit-identical to the
+same tenant served alone (property-tested in
+``tests/test_fleet_serve.py``).
+
+Cross-tenant fairness extends PR 6's overload discipline: admission
+orders eligible requests by ``policy.FleetFairness`` (priority, then
+weighted virtual service, then FIFO), per-tenant page quotas bound a
+hot tenant's pool claim, and a mid-round ``PoolExhausted`` preempts
+the tenant most over its fair page share first (then PR 6's
+lowest-priority / most-remaining rule) with the scheduler's
+replay-based resume.  Per-tenant re-tuning runs through per-tenant
+``AdaptivePolicy`` instances; a cut or draft-length switch applies at
+the *tenant's own* drained boundary — other tenants never pay a
+fleet-wide drain barrier for one edge's re-partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import Channel
+from repro.models import layers as ML
+from repro.models import transformer as TF
+from repro.serve.engine import _SplitPhases
+from repro.serve.kvcache import PoolExhausted, _PagedPool
+from repro.serve.policy import AdaptivePolicy, FleetFairness, _CutBank
+from repro.serve.scheduler import Request, _bucket_len, _jit_phase, \
+    _remove_is, _SlotEngine
+from repro.serve.spec import _SpecDraftMixin
+from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
+                                   ServeStats, Transport)
+
+__all__ = ["TenantSpec", "FleetServingEngine"]
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One edge of the fleet: its link, its partition, its share.
+
+    ``policy="auto"`` gives the tenant its own ``AdaptivePolicy`` over
+    its own telemetry (candidate cuts default to the engine grid
+    {0, mid, last-1} ∪ {cut_layer}); switches apply at the tenant's
+    drained boundary.  ``weight`` is the tenant's share under
+    ``FleetFairness``; ``max_pages`` is an optional hard KV page quota
+    (None = uncapped — fairness then comes from admission ordering and
+    over-share-first preemption alone)."""
+    name: str
+    channel: Any = None
+    cut_layer: int = 0
+    spec_k: int = 1
+    weight: float = 1.0
+    max_pages: Optional[int] = None
+    policy: Union[AdaptivePolicy, str, None] = None
+
+
+class _Tenant:
+    """Runtime state of one edge: transport (channel + telemetry),
+    stats, current (cut, spec_k), pending re-tune decision."""
+
+    def __init__(self, spec: TenantSpec, policy: Optional[AdaptivePolicy]):
+        self.name = spec.name
+        self.spec = spec
+        self.transport = Transport(spec.channel)
+        self.stats = ServeStats()
+        self.cut = spec.cut_layer
+        self.spec_k = spec.spec_k
+        self.policy = policy
+        self.pending = None          # Decision awaiting a drained boundary
+        self.hold = False            # pause this tenant's admission
+
+    @property
+    def telemetry(self):
+        return self.transport.telemetry
+
+    def now(self) -> float:
+        return float(getattr(self.transport.channel, "clock_s", 0.0))
+
+    def wait(self, seconds: float) -> bool:
+        s = float(seconds)
+        if s <= 0:
+            return True
+        w = getattr(self.transport.channel, "wait", None)
+        if w is None:
+            return False             # clockless channel
+        w(s)
+        self.stats.stall_wait_s += s
+        return True
+
+
+class _CutRuntime(_SpecDraftMixin, _SplitPhases):
+    """Per-cut serving runtime: the jitted split-cache phases plus the
+    edge/cloud/draft caches for one cut, shared by *every* tenant served
+    at that cut.  Weights come out of the fleet's shared ``_CutBank``
+    (pointer swap — building a runtime never requantizes); the caches
+    index the fleet's single ``_PagedPool``, so all cuts see identical
+    page geometry and one slot's pages mean the same thing in every
+    runtime (writes from slots outside a phase call's group are masked
+    to the dump page via ``table_for``)."""
+
+    def __init__(self, fleet: "FleetServingEngine", cut: int):
+        cfg = fleet.cfg
+        self.cfg = cfg
+        self.max_len = fleet.max_len
+        self.max_batch = fleet.max_batch
+        self.page_size = fleet.page_size
+        self.a_bits = fleet.a_bits
+        self.edge_paged = self.cloud_paged = True
+        self.edge_int8 = fleet.edge_int8
+        self.cloud_int8 = fleet.cloud_int8
+        self._edge_qctx = fleet._edge_qctx
+        self.trace_counts = fleet.trace_counts
+        self.mesh = None
+        self.cut = cut
+        self.n_edge = cut + 1
+        self.n_cloud = cfg.n_layers - self.n_edge
+        self.edge_blocks, self.cloud_blocks, self.draft_blocks = \
+            fleet._bank.get(cut)
+        n_pool = fleet._pool.allocator.num_pages
+        self._edge_cache = TF.init_cache(
+            cfg, fleet.max_batch, fleet.max_len, layers=self.n_edge,
+            paged=True, quantized=self.edge_int8,
+            page_size=fleet.page_size, num_pages=n_pool)
+        self._cloud_cache = TF.init_cache(
+            cfg, fleet.max_batch, fleet.max_len, layers=self.n_cloud,
+            paged=True, quantized=self.cloud_int8,
+            page_size=fleet.page_size, num_pages=n_pool)
+        self._spec_max = fleet._spec_max
+        self._edge_prefill = _jit_phase(self._edge_prefill_impl, donate=(3,))
+        self._cloud_prefill = _jit_phase(self._cloud_prefill_impl,
+                                         donate=(4,))
+        self._edge_decode = _jit_phase(self._edge_decode_impl, donate=(3,))
+        self._cloud_decode = _jit_phase(self._cloud_decode_merge_impl,
+                                        donate=(4,))
+        if self._spec_max > 1:
+            self._draft_cache = TF.init_cache(
+                cfg, fleet.max_batch, fleet.max_len, layers=self.n_cloud,
+                paged=True, quantized=self.edge_int8,
+                page_size=fleet.page_size, num_pages=n_pool)
+            self._draft_prefill = _jit_phase(self._draft_prefill_impl,
+                                             donate=(3,))
+            self._spec_jits: Dict[int, Tuple[Any, Any]] = {}
+            self._fleet_jits: Dict[int, Tuple[Any, Any]] = {}
+
+    # Fleet variants of the round phases: the group-masked merge of the
+    # round's cur/pos back into the fleet's global arrays happens INSIDE
+    # the jitted phase (one dispatch per round), not as follow-up eager
+    # gathers/scatters — those recompile per group size and on a small
+    # model cost more than the round's own compute.
+    def _cloud_decode_merge_impl(self, blocks, tail, blob, qp, cache, pos,
+                                 bt, cur, gmask):
+        nxt, cache, npos = self._cloud_decode_impl(blocks, tail, blob, qp,
+                                                   cache, pos, bt)
+        return (jnp.where(gmask, nxt, cur), cache,
+                jnp.where(gmask, npos, pos))
+
+    def _verify_merge_impl(self, k, blocks, tail, blobs, scales, zps,
+                           drafts, cache, pos, bt, cur, gmask):
+        t, n_commit, ncur, cache, npos = self._verify_impl(
+            k, blocks, tail, blobs, scales, zps, drafts, cache, pos, bt)
+        return (t, n_commit, jnp.where(gmask, ncur, cur), cache,
+                jnp.where(gmask, npos, pos))
+
+    def _fleet_spec_fns(self, k: int):
+        if k not in self._fleet_jits:
+            draft = _jit_phase(partial(self._spec_draft_impl, k),
+                               donate=(5, 6))
+            verify = _jit_phase(partial(self._verify_merge_impl, k),
+                                donate=(6,))
+            self._fleet_jits[k] = (draft, verify)
+        return self._fleet_jits[k]
+
+
+class FleetServingEngine:
+    """One cloud, N edges: continuous batching over a shared slot table
+    with cross-tenant batched verify rounds (see the module docstring).
+
+    ``tenants`` is a list of ``TenantSpec``; requests are submitted per
+    tenant (``generate``/``generate_requests``) and served concurrently.
+    Per-tenant wire traffic is charged to the tenant's own channel and
+    ``ServeStats`` (``engine.tenant(name).stats``); ``engine.stats``
+    aggregates the fleet.  ``demand_paged=True`` turns on PR 6's
+    oversubscription discipline pool-wide, with ``FleetFairness``
+    choosing cross-tenant preemption victims."""
+
+    def __init__(self, params: Any, cfg: TF.LMConfig,
+                 tenants: Sequence[TenantSpec], *, max_batch: int = 8,
+                 max_len: int = 128, a_bits: Optional[int] = 8,
+                 edge_int8: bool = True, cloud_int8: bool = True,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 demand_paged: bool = False,
+                 spec_acceptance: float = 0.8):
+        assert tenants, "a fleet needs at least one tenant"
+        assert len({t.name for t in tenants}) == len(tenants), \
+            "tenant names must be unique"
+        self.cfg = dataclasses.replace(cfg, remat=False)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.a_bits = a_bits
+        self.edge_int8 = edge_int8
+        self.cloud_int8 = cloud_int8
+        self.page_size = page_size
+        self.demand_paged = bool(demand_paged)
+        self.trace_counts = {"prefill": 0, "decode": 0, "spec_draft": 0,
+                             "verify": 0, "edge_only": 0, "resync": 0,
+                             "draft_rebuild": 0}
+        # act_axis=0 keeps each slot's Eq.(1) activation lattice
+        # independent of its batch neighbours — with cross-tenant
+        # batching this is what guarantees one tenant's stream is
+        # bit-identical whether it shares the batch or runs solo
+        self._edge_qctx = None if a_bits is None else \
+            ML.QuantCtx(mode="dynamic", a_bits=a_bits,
+                        quantize_weights=False, act_axis=0)
+        deploy_qctx = None if a_bits is None else \
+            ML.QuantCtx(mode="dynamic", a_bits=a_bits)
+        self._pool = _PagedPool.build(max_batch, max_len, page_size,
+                                      num_pages)
+
+        # per-tenant control planes + the shared weight bank
+        self._tenants: Dict[str, _Tenant] = {}
+        bank_cuts = set()
+        spec_max = 1
+        for spec in tenants:
+            assert 0 <= spec.cut_layer < cfg.n_layers, spec
+            policy = spec.policy
+            if policy == "auto":
+                assert spec.cut_layer <= cfg.n_layers - 2, \
+                    "adaptive tenants need a cloud block at every cut"
+                initial = spec.channel or Channel(
+                    bandwidth_bytes_per_s=float("inf"))
+                initial = getattr(initial, "phase", initial)
+                cuts = tuple(sorted({0, (cfg.n_layers - 1) // 2,
+                                     cfg.n_layers - 2, spec.cut_layer}))
+                policy = AdaptivePolicy(cfg, batch=max_batch, cuts=cuts,
+                                        ks=(1, 2, 4, 8),
+                                        fallback_channel=initial,
+                                        acceptance_prior=spec_acceptance)
+            self._tenants[spec.name] = _Tenant(spec, policy or None)
+            bank_cuts.add(spec.cut_layer)
+            spec_max = max(spec_max, spec.spec_k)
+            if policy is not None:
+                bank_cuts |= set(policy.cuts or ())
+                spec_max = max(spec_max, *policy.ks)
+        self._spec_max = spec_max
+        self.fairness = FleetFairness(
+            {t.name: t.weight for t in tenants},
+            {t.name: t.max_pages for t in tenants})
+
+        self.embed = params["embed"]
+        self.tail = {"final_norm": params["final_norm"],
+                     "lm_head": params["lm_head"]}
+        self._bank = _CutBank(params, self.cfg, bank_cuts, deploy_qctx)
+        self._runtimes: Dict[int, _CutRuntime] = {}
+        # batched phase dispatches actually issued (one per (cut, k)
+        # group per turn) — the quantity cross-tenant batching divides
+        # by up to N vs N independent engines; benchmarks report it
+        self.round_calls = 0
+        # device-resident group masks, keyed by slot tuple — groups
+        # repeat across rounds, so the host->device put happens once
+        # (the masked cur/pos merge itself runs inside the jitted
+        # round phases, see ``_CutRuntime._cloud_decode_merge_impl``)
+        self._gmasks: Dict[Tuple[int, ...], Any] = {}
+        # scheduler-internal live view (mirrors _SlotEngine's)
+        self._sched_active = None
+        self._sched_committed = None
+
+    # -- public surface ------------------------------------------------------
+    def tenant(self, name: str) -> _Tenant:
+        return self._tenants[name]
+
+    @property
+    def stats(self) -> ServeStats:
+        """Fleet-wide rollup of the per-tenant stats."""
+        return ServeStats.aggregate(
+            [t.stats for t in self._tenants.values()])
+
+    def generate(self, prompts: Dict[str, List[np.ndarray]], *,
+                 max_new_tokens: int = 16) -> Dict[str, List[List[int]]]:
+        """Greedy-decode per-tenant prompt lists with cross-tenant
+        continuous batching; returns token streams per tenant in input
+        order."""
+        reqs = {name: [Request(uid=i, prompt=np.asarray(p),
+                               max_new_tokens=max_new_tokens)
+                       for i, p in enumerate(ps)]
+                for name, ps in prompts.items()}
+        return self.generate_requests(reqs)
+
+    def generate_requests(self, reqs: Dict[str, List[Request]]
+                          ) -> Dict[str, List[List[int]]]:
+        """Run caller-built per-tenant ``Request`` lists (priorities,
+        deadlines, arrival times on each tenant's own simulated clock)."""
+        flat: List[Request] = []
+        seq = 0
+        for name, rl in reqs.items():
+            assert name in self._tenants, f"unknown tenant {name!r}"
+            for r in rl:
+                r.tenant = name
+                r._seq = seq
+                r._enq_s = float(r.arrival_s)
+                seq += 1
+                flat.append(r)
+        if flat:
+            self._run(flat)
+        return {name: [r.out_tokens for r in rl]
+                for name, rl in reqs.items()}
+
+    # -- internals -----------------------------------------------------------
+    def _runtime(self, cut: int) -> _CutRuntime:
+        if cut not in self._runtimes:
+            self._runtimes[cut] = _CutRuntime(self, cut)
+        return self._runtimes[cut]
+
+    def _reserve(self, max_news: np.ndarray) -> np.ndarray:
+        head = self._spec_max - 1
+        if self.demand_paged:
+            return np.minimum(max_news + head, self._spec_max)
+        return max_news + head
+
+    def _tenant_tick(self, t: _Tenant, n_active: int) -> None:
+        """One control-loop turn for one tenant: re-decide (cut, k) from
+        its telemetry; apply at its own drained boundary, holding only
+        *its* admission while its slots drain (no fleet-wide barrier)."""
+        if t.policy is not None:
+            d = t.policy.decide(t.telemetry, cut=t.cut, spec_k=t.spec_k)
+            t.pending = d if (d.cut, d.spec_k) != (t.cut, t.spec_k) else None
+        if t.pending is None:
+            t.hold = False
+            return
+        if n_active:
+            t.hold = True
+            t.stats.policy_holds += 1
+            return
+        if t.pending.cut != t.cut:
+            t.cut = t.pending.cut
+            t.stats.cut_switches += 1
+        if t.pending.spec_k != t.spec_k:
+            t.spec_k = t.pending.spec_k
+            t.stats.spec_k_switches += 1
+        t.pending = None
+        t.hold = False
+
+    def _quota_blocked(self, tenant: str, pending: int, needed: int) -> bool:
+        q = self.fairness.quotas.get(tenant)
+        return q is not None and \
+            self._pool.owner_pages(tenant) + pending + needed > q
+
+    def _run(self, reqs: List[Request]) -> None:
+        queue: List[Request] = list(reqs)
+        active: Dict[int, Tuple[Request, int]] = {}
+        free = list(range(self.max_batch))
+        cur = jnp.zeros((self.max_batch,), jnp.int32)
+        pos = jnp.zeros((self.max_batch,), jnp.int32)
+        rounds: List[Tuple[Any, List[Tuple[Request, int, int]]]] = []
+
+        def parked_tokens(r: Request) -> np.ndarray:
+            chunks = [np.asarray(t[s, :n])
+                      for t, takes in rounds
+                      for rr, s, n in takes if rr is r and n > 0]
+            return (np.concatenate(chunks).astype(np.int32) if chunks
+                    else np.zeros((0,), np.int32))
+
+        self._sched_active = active
+        self._sched_committed = parked_tokens
+
+        def preempt(slot: int) -> None:
+            r, _c = active.pop(slot)
+            t = self._tenants[r.tenant]
+            r._parked = parked_tokens(r)
+            r._enq_s = t.now()
+            r.preemptions += 1
+            t.stats.preemptions += 1
+            self._pool.retire(slot)
+            free.append(slot)
+            queue.append(r)
+
+        while queue or active:
+            # control plane: per-tenant policy ticks + pool snapshot
+            n_active_by = {name: 0 for name in self._tenants}
+            for r, _c in active.values():
+                n_active_by[r.tenant] += 1
+            for name, t in self._tenants.items():
+                self._tenant_tick(t, n_active_by[name])
+                t.stats.observe_pool(self._pool)
+
+            # cross-tenant weighted-fair admission
+            admitted, cur, pos, stalled = self._admit_turn(
+                queue, active, free, cur, pos, rounds)
+
+            if not admitted and not active and queue:
+                # nothing running, nothing admitted: either requests
+                # haven't arrived on their tenants' clocks yet (advance
+                # each tenant's clock to its own next arrival — clocks
+                # are independent, so this never charges one tenant for
+                # another's idle gap), or the pool/quota can never fit
+                # one (raise)
+                progressed = False
+                for name, t in self._tenants.items():
+                    pend = [r.arrival_s for r in queue if r.tenant == name]
+                    if pend and min(pend) > t.now():
+                        progressed |= t.wait(min(pend) - t.now())
+                if not progressed:
+                    if stalled is not None:
+                        r = stalled
+                        raise RuntimeError(
+                            f"fleet KV page pool (or tenant "
+                            f"{r.tenant!r} quota) can never admit "
+                            f"request uid={r.uid} (prompt "
+                            f"{len(r.prompt)} + {r.max_new_tokens} new) "
+                            f"even with every slot idle")
+                    # clockless channels: batch semantics — everything
+                    # queued on them counts as already arrived
+                    for r in queue:
+                        ch = self._tenants[r.tenant].transport.channel
+                        if getattr(ch, "wait", None) is None:
+                            r.arrival_s = 0.0
+                continue
+
+            # retire requests whose budget just filled
+            for s in [s for s, (r, c) in active.items()
+                      if c >= r.max_new_tokens]:
+                r, _ = active.pop(s)
+                t = self._tenants[r.tenant]
+                r.done = True
+                r.finish_s = t.now()
+                if (r.deadline_s is not None
+                        and r.finish_s > r.deadline_s + 1e-9):
+                    t.stats.deadline_misses += 1
+                self._pool.retire(s)
+                free.append(s)
+
+            # demand paging: grow live claims; PoolExhausted preempts
+            # the tenant most over its fair share first (FleetFairness)
+            if active and self.demand_paged:
+                usable = self._pool.allocator.num_pages - 1
+                for s in sorted(active,
+                                key=lambda v: (-active[v][0].priority, v)):
+                    if s not in active:
+                        continue
+                    r, c = active[s]
+                    k_t = self._tenants[r.tenant].spec_k
+                    horizon = min(len(r.prompt) + c - 1 + k_t, self.max_len)
+                    while s in active:
+                        try:
+                            self._pool.ensure(s, horizon)
+                            break
+                        except PoolExhausted:
+                            victims = sorted(
+                                active,
+                                key=lambda v: (*self.fairness.victim_key(
+                                    active[v][0],
+                                    self._pool.owner_pages(
+                                        active[v][0].tenant),
+                                    usable,
+                                    active[v][0].max_new_tokens
+                                    - active[v][1]), v))
+                            preempt(victims[0])
+
+            # decode rounds, grouped by (cut, spec_k): one batched
+            # multi-tenant phase call per group
+            if active:
+                groups: Dict[Tuple[int, int], List[int]] = {}
+                for s, (r, _c) in active.items():
+                    t = self._tenants[r.tenant]
+                    groups.setdefault((t.cut, t.spec_k), []).append(s)
+                for (gcut, gk) in sorted(groups):
+                    cur, pos = self._group_round(
+                        self._runtime(gcut), gk,
+                        np.asarray(sorted(groups[(gcut, gk)]), np.int32),
+                        cur, pos, active, rounds)
+        self._sched_active = None
+        self._sched_committed = None
+        if not rounds:
+            return
+        all_toks = np.asarray(
+            jnp.concatenate([t for t, _ in rounds], axis=1))
+        col = 0
+        for toks_r, takes in rounds:
+            for r, s, n in takes:
+                r.out_tokens.extend(int(t) for t in all_toks[s, col:col + n])
+            col += toks_r.shape[1]
+
+    # -- admission -----------------------------------------------------------
+    def _admit_turn(self, queue, active, free, cur, pos, rounds):
+        """One admission turn: fair-ordered eligible requests grouped by
+        (cut, bucket) into batched prefill calls over the shared slot
+        table.  Returns (admitted_any, cur, pos, first_blocked_request).
+        A quota-blocked request is skipped — its tenant waits without
+        blocking the others (and never seeds a group); a pool-wide
+        shortfall ends the turn (retirements must return pages first)."""
+        admitted = False
+        stalled: Optional[Request] = None
+        while free:
+            elig = [r for r in queue
+                    if not self._tenants[r.tenant].hold
+                    and r.arrival_s <= self._tenants[r.tenant].now() + 1e-12]
+            elig.sort(key=self.fairness.admission_key)
+            group: List[Request] = []
+            rows: List[np.ndarray] = []
+            slots: List[int] = []
+            shapes: List[Tuple[int, int]] = []
+            pending_pages: Dict[str, int] = {}
+            gcut = gbucket = None
+            pool_short = False
+            for r in elig:
+                if not free:
+                    break
+                t = self._tenants[r.tenant]
+                bucket = _bucket_len(_SlotEngine._eff_plen(self, r),
+                                     self.max_len)
+                if gcut is not None and (t.cut, bucket) != (gcut, gbucket):
+                    continue
+                row = _SlotEngine._eff_prompt(r)
+                eff_new = (r.max_new_tokens if r._parked is None
+                           else r.max_new_tokens - len(r._parked) + 1)
+                assert (len(row) + eff_new + self._spec_max - 1) \
+                    <= self.max_len, \
+                    "prompt + generation (+ draft headroom) exceeds max_len"
+                needed = self._pool.pages_needed(
+                    len(row), int(self._reserve(np.int64(eff_new))),
+                    bucket)
+                if self._quota_blocked(r.tenant,
+                                       pending_pages.get(r.tenant, 0),
+                                       needed):
+                    stalled = stalled or r
+                    continue
+                if sum(self._pool.pages_needed(
+                        p, int(self._reserve(np.int64(m))), bucket)
+                        for p, m in shapes) + needed \
+                        > self._pool.free_pages():
+                    stalled = stalled or r
+                    pool_short = True
+                    break
+                if gcut is None:
+                    gcut, gbucket = t.cut, bucket
+                pending_pages[r.tenant] = \
+                    pending_pages.get(r.tenant, 0) + needed
+                shapes.append((len(row), eff_new))
+                group.append(r)
+                rows.append(row)
+                slots.append(free.pop(0))
+            if not group:
+                break
+            for r in group:
+                _remove_is(queue, r)
+            cur, pos = self._admit_group(group, rows, slots, shapes,
+                                         gcut, gbucket, cur, pos, rounds,
+                                         active)
+            admitted = True
+            if pool_short:
+                break
+        return admitted, cur, pos, stalled
+
+    def _admit_group(self, group, rows, slots, shapes, cut, bucket, cur,
+                     pos, rounds, active):
+        """Batched prefill of one (cut, bucket) admission group — rows
+        may span tenants; each tenant's wire is charged separately."""
+        runtime = self._runtime(cut)
+        toks = np.zeros((len(group), bucket), np.int32)
+        for i, row in enumerate(rows):
+            toks[i, :len(row)] = row
+        plens = np.asarray([len(row) for row in rows], np.int32)
+        reserves = self._reserve(
+            np.asarray([m for _, m in shapes], np.int64))
+        # pool admission per tenant-run (owner tagging), one table read
+        i = 0
+        while i < len(group):
+            j = i
+            while j < len(group) and group[j].tenant == group[i].tenant:
+                j += 1
+            self._pool.admit(slots[i:j], plens[i:j], reserves[i:j], bucket,
+                             owner=group[i].tenant)
+            i = j
+        bt_rows = self._pool.rows(np.asarray(slots, np.int32), bucket)
+        slots_j = jnp.asarray(np.asarray(slots, np.int32))
+        plens_j = jnp.asarray(plens)
+        blob, qp, runtime._edge_cache = runtime._edge_prefill(
+            runtime.edge_blocks, self.embed, jnp.asarray(toks),
+            runtime._edge_cache, slots_j, bt_rows, plens_j)
+        runtime._cloud_cache, cur, pos = runtime._cloud_prefill(
+            runtime.cloud_blocks, self.tail, blob, qp,
+            runtime._cloud_cache, slots_j, bt_rows, cur, pos, plens_j)
+        drafting = any(self._tenants[r.tenant].spec_k > 1 for r in group)
+        if self._spec_max > 1 and drafting:
+            runtime._draft_cache = runtime._draft_prefill(
+                runtime.draft_blocks, blob, qp, runtime._draft_cache,
+                slots_j, bt_rows, plens_j)
+        # per-tenant wire accounting over the group's rows
+        for name in {r.tenant for r in group}:
+            t = self._tenants[name]
+            idx = [i for i, r in enumerate(group) if r.tenant == name]
+            t.transport.account_blob(
+                t.stats, blob, phase="prefill",
+                row_elems=plens[idx].astype(np.int64) * self.cfg.d_model)
+            t.transport.account_downlink(t.stats, len(idx),
+                                         phase="prefill")
+            t.stats.prefill_calls += 1
+            t.stats.prefill_tokens += int(plens[idx].sum())
+        # resumed requests: pin the stream to the parked tokens
+        resumes = [(s, r) for r, s in zip(group, slots)
+                   if r._parked is not None]
+        if resumes:
+            rs = jnp.asarray([s for s, _ in resumes], jnp.int32)
+            lasts = jnp.asarray([int(r._parked[-1]) for _, r in resumes],
+                                jnp.int32)
+            cur = cur.at[rs].set(lasts)
+        fresh = [(r, s, 1) for r, s in zip(group, slots)
+                 if r._parked is None]
+        if fresh:
+            rounds.append((cur[:, None], fresh))
+        for r, s in zip(group, slots):
+            t = self._tenants[r.tenant]
+            active[s] = (r, 1 if r._parked is None else len(r._parked))
+            if r.admit_s is None:
+                r.admit_s = t.now()
+            t.stats.queue_wait_s += max(0.0, t.now() - r._enq_s)
+            r._parked = None
+        return cur, pos
+
+    # -- the cross-tenant batched round --------------------------------------
+    def _group_round(self, runtime, k, slots_g, cur, pos, active, rounds):
+        """Advance one (cut, k) group of live slots — possibly spanning
+        several tenants — with one batched phase sequence: one edge
+        decode (k=1) or one k-step draft scan plus **one** multi-token
+        verify over the shared paged pool.  Slots outside the group are
+        masked to the dump page; only the group's rows merge back into
+        the fleet's cur/pos."""
+        self.round_calls += 1
+        by_tenant: Dict[str, List[int]] = {}
+        for s in slots_g:
+            by_tenant.setdefault(active[int(s)][0].tenant, []).append(int(s))
+        bt = self._pool.table_for(slots_g)
+        gkey = tuple(int(s) for s in slots_g)
+        gmask = self._gmasks.get(gkey)
+        if gmask is None:
+            gm = np.zeros((self.max_batch,), np.bool_)
+            gm[list(gkey)] = True
+            gmask = self._gmasks[gkey] = jnp.asarray(gm)
+        if k == 1:
+            blob, qp, runtime._edge_cache = runtime._edge_decode(
+                runtime.edge_blocks, self.embed, cur, runtime._edge_cache,
+                pos, bt)
+            for name, srows in by_tenant.items():
+                t = self._tenants[name]
+                t.transport.account_blob(t.stats, blob, phase="decode",
+                                         rows=len(srows))
+            cur, runtime._cloud_cache, pos = runtime._cloud_decode(
+                runtime.cloud_blocks, self.tail, blob, qp,
+                runtime._cloud_cache, pos, bt, cur, gmask)
+            for name, srows in by_tenant.items():
+                t = self._tenants[name]
+                t.transport.account_downlink(t.stats, len(srows))
+            counts = None
+            toks_block = cur[:, None]
+        else:
+            draft_fn, verify_fn = runtime._fleet_spec_fns(k)
+            blobs, scales, zps, drafts, runtime._edge_cache, \
+                runtime._draft_cache = draft_fn(
+                    runtime.edge_blocks, runtime.draft_blocks, self.embed,
+                    self.tail, cur, runtime._edge_cache,
+                    runtime._draft_cache, pos, bt)
+            for name, srows in by_tenant.items():
+                t = self._tenants[name]
+                t.transport.charge(
+                    t.stats,
+                    len(srows) * (k * (self.cfg.d_model
+                                       * blobs.dtype.itemsize + _QP_BYTES)
+                                  + (k - 1) * _TOK_BYTES) + _MSG_BYTES,
+                    phase="decode")
+            toks, n_commit, cur, runtime._cloud_cache, pos = verify_fn(
+                runtime.cloud_blocks, self.tail, blobs, scales, zps,
+                drafts, runtime._cloud_cache, pos, bt, cur, gmask)
+            counts = np.asarray(n_commit)
+            for name, srows in by_tenant.items():
+                t = self._tenants[name]
+                t.transport.account_downlink(t.stats, len(srows), k=k)
+                t.stats.spec_rounds += 1
+                hits = int(np.minimum(counts[srows] - 1, k - 1).sum())
+                t.stats.drafted_tokens += (k - 1) * len(srows)
+                t.stats.draft_hits += hits
+                t.telemetry.observe_round((k - 1) * len(srows), hits)
+            toks_block = toks
+        takes = []
+        for s in slots_g:
+            r, c = active[int(s)]
+            n = 1 if counts is None else int(counts[s])
+            n = min(n, r.max_new_tokens - c)
+            active[int(s)] = (r, c + n)
+            takes.append((r, int(s), n))
+            self.fairness.charge(r.tenant, n)
+            self._tenants[r.tenant].stats.decode_tokens += n
+        for name in by_tenant:
+            self._tenants[name].stats.decode_steps += 1
+        rounds.append((toks_block, takes))
+        return cur, pos

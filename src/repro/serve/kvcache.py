@@ -105,6 +105,12 @@ class _PagedPool:
         self.bt = np.zeros((max_batch, pages_per_slot), np.int32)
         self._slot_pages: Dict[int, List[int]] = {}
         self._dev: Optional[jax.Array] = None
+        # per-owner (tenant) page accounting for the fleet engine's
+        # weighted-fair sharing: admission tags each slot with an owner,
+        # ensure()-growth and retirement keep the count current
+        self._slot_owner: Dict[int, str] = {}
+        self._owner_pages: Dict[str, int] = {}
+        self._masked: Dict[Tuple[int, ...], jax.Array] = {}
 
     @classmethod
     def build(cls, max_batch: int, max_len: int, page_size: int,
@@ -157,16 +163,23 @@ class _PagedPool:
         return 2 * n_layers * len(self.allocator.live) * per_page + scales
 
     def admit(self, slots: Sequence[int], plens: Sequence[int],
-              max_news: Sequence[int], padded_len: int) -> jax.Array:
+              max_news: Sequence[int], padded_len: int,
+              owner: Optional[str] = None) -> jax.Array:
         """Allocate pages for a prefill group; returns the group's block
-        table rows [n, pages_per_slot]."""
+        table rows [n, pages_per_slot].  ``owner`` tags the slots for
+        per-tenant page accounting (``owner_pages``)."""
         for s, pl_, mn in zip(slots, plens, max_news):
             pages = self.allocator.alloc(
                 self.pages_needed(pl_, mn, padded_len))
             self._slot_pages[int(s)] = pages
+            if owner is not None:
+                self._slot_owner[int(s)] = owner
+                self._owner_pages[owner] = \
+                    self._owner_pages.get(owner, 0) + len(pages)
             self.bt[s, :] = 0
             self.bt[s, :len(pages)] = pages
         self._dev = None
+        self._masked.clear()
         # trim to the pages the padded prompt can touch: the prefill's
         # q-block read costs O(table width), so handing it the full
         # pages_per_slot row would make prefill scale with max_len
@@ -205,15 +218,42 @@ class _PagedPool:
         grown = self.allocator.alloc(need - len(pages))
         self.bt[s, len(pages):need] = grown
         pages.extend(grown)
+        owner = self._slot_owner.get(s)
+        if owner is not None:
+            self._owner_pages[owner] += len(grown)
         self._dev = None
+        self._masked.clear()
         return True
 
     def retire(self, slot: int) -> None:
         pages = self._slot_pages.pop(int(slot), None)
         if pages is not None:
             self.allocator.free(pages)
+            owner = self._slot_owner.pop(int(slot), None)
+            if owner is not None:
+                self._owner_pages[owner] -= len(pages)
             self.bt[slot, :] = 0
             self._dev = None
+            self._masked.clear()
+
+    # -- pool-pressure observability (public: no private poking) -------------
+    def free_pages(self) -> int:
+        """Allocatable pages on the free list right now — the quantity
+        admission backpressure and the fairness policy key off."""
+        return self.allocator.num_free
+
+    def utilization(self) -> float:
+        """Fraction of allocatable pages currently claimed by live slots
+        (the reserved dump page is excluded from the denominator)."""
+        cap = self.allocator.num_pages - 1
+        return (cap - self.allocator.num_free) / max(cap, 1)
+
+    def owner_pages(self, owner: str) -> int:
+        """Pages currently held by ``owner``-tagged slots (see ``admit``)."""
+        return self._owner_pages.get(owner, 0)
+
+    def slot_owner(self, slot: int) -> Optional[str]:
+        return self._slot_owner.get(int(slot))
 
     def table_dev(self) -> jax.Array:
         """Block table on device, trimmed to the pages actually in use
@@ -232,6 +272,23 @@ class _PagedPool:
             width = min(width, self.pages_per_slot)
             self._dev = jnp.array(self.bt[:, :width], copy=True)
         return self._dev
+
+    def table_for(self, slots: Sequence[int]) -> jax.Array:
+        """Like ``table_dev`` but with every row *outside* ``slots``
+        zeroed, so slots riding along in somebody else's batched phase
+        call write into the allocator's reserved dump page instead of
+        their own pages — the convention the resync replay established,
+        now the backbone of the fleet engine's cross-tenant batched
+        rounds (a (cut, k) group's phase call spans the full slot axis
+        but must only touch the group's pages).  Cached per group until
+        the next admit/ensure/retire invalidates the table."""
+        key = tuple(sorted(int(s) for s in slots))
+        if key not in self._masked:
+            full = np.asarray(self.table_dev())
+            masked = np.zeros_like(full)
+            masked[list(key)] = full[list(key)]
+            self._masked[key] = jnp.array(masked, copy=True)
+        return self._masked[key]
 
 
 def _paged_prefill_view(cache: Dict[str, jax.Array], n_layers: int, n: int,

@@ -97,6 +97,10 @@ class _OverloadMixin:
     def _tick_resources(self):
         if self.pressure is not None and self._pool is not None:
             self.pressure.apply(self._pool.allocator, self._now())
+        if self._pool is not None:
+            # pool-pressure snapshot: benchmarks and the fairness policy
+            # read free pages / utilization off stats, not pool privates
+            self.stats.observe_pool(self._pool)
 
     def _now(self):
         return float(getattr(self.channel, "clock_s", 0.0))

@@ -40,7 +40,8 @@ from repro.models import transformer as TF
 from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
                                    LinkTelemetry)
 
-__all__ = ["Decision", "AdaptivePolicy", "DeadlineAdmission", "_CutBank"]
+__all__ = ["Decision", "AdaptivePolicy", "DeadlineAdmission", "_CutBank",
+           "FleetFairness"]
 
 # the param-dict keys ``layers.dense``/``layers.moe_*`` route through
 # ``QuantCtx.weight`` — exactly these leaves carry the INT8 lattice
@@ -239,6 +240,60 @@ class AdaptivePolicy:
                 != (d.cut, d.spec_k)):
             self.history.append(d)
         return d
+
+
+class FleetFairness:
+    """Cross-tenant weighted-fair sharing for the fleet engine — PR 6's
+    priority/deadline admission and preemption discipline extended to a
+    shared slot table and page pool serving many edges at once.
+
+    Each tenant carries a ``weight`` (its share of the cloud) and an
+    optional hard ``page quota``.  Fairness is virtual-service-time
+    scheduling: every committed token charges its tenant
+    ``1 / weight`` of virtual service, and admission orders eligible
+    requests by ``(priority desc, tenant virtual service asc, FIFO)`` —
+    a hot tenant's backlog keeps admitting only while its weighted
+    service stays behind the others', so it can never starve a light
+    tenant out of slots.  Preemption inverts the same ordering, with
+    pool pressure first: victims come from the tenant *most over its
+    fair page share* (measured through the pool's public
+    ``owner_pages`` accounting), then lowest priority, then
+    most-remaining-budget — the PR 6 rule, tenant-aware."""
+
+    def __init__(self, weights: Dict[str, float],
+                 quotas: Optional[Dict[str, Optional[int]]] = None):
+        assert weights and all(w > 0 for w in weights.values()), weights
+        self.weights = dict(weights)
+        self.quotas = {t: (quotas or {}).get(t) for t in weights}
+        self._wsum = sum(self.weights.values())
+        self.vservice: Dict[str, float] = {t: 0.0 for t in weights}
+
+    def charge(self, tenant: str, tokens: int) -> None:
+        """``tokens`` committed for ``tenant``: advance its virtual
+        service clock by the weighted amount."""
+        self.vservice[tenant] += tokens / self.weights[tenant]
+
+    def admission_key(self, req) -> Tuple:
+        """Sort key for the eligible-request queue (ascending)."""
+        return (-req.priority, self.vservice.get(req.tenant, 0.0), req._seq)
+
+    def fair_pages(self, tenant: str, usable_pages: int) -> float:
+        """``tenant``'s weighted fair share of the pool."""
+        return usable_pages * self.weights[tenant] / self._wsum
+
+    def over_quota(self, tenant: str, held: int) -> bool:
+        """Hard quota check at admission/growth time (None = uncapped)."""
+        q = self.quotas.get(tenant)
+        return q is not None and held > q
+
+    def victim_key(self, req, tenant_pages: int, usable_pages: int,
+                   remaining: int) -> Tuple:
+        """Sort key for preemption victims (ascending = preempt first):
+        most over fair page share, then lowest priority, then
+        most-remaining-budget (PR 6's tie-break), preserving slot-id
+        determinism downstream."""
+        over = tenant_pages - self.fair_pages(req.tenant, usable_pages)
+        return (-over, req.priority, -remaining)
 
 
 class DeadlineAdmission:

@@ -80,6 +80,8 @@ class Request:
     priority: int = 0             # higher admits first / preempts last
     deadline_s: Optional[float] = None   # absolute, on the simulated clock
     arrival_s: float = 0.0        # when the request becomes admissible
+    # -- multi-tenant fleet serving (serve.fleet) -------------------------
+    tenant: Optional[str] = None  # owning edge/tenant; None = single-tenant
     shed: bool = False            # refused by deadline-aware admission
     preemptions: int = 0          # times this request was suspended
     admit_s: Optional[float] = None      # first admission time

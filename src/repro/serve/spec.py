@@ -62,7 +62,13 @@ from repro.serve.scheduler import _bucket_len, _jit_phase
 class _SpecDraftMixin:
     """Draft/verify phase implementations, mixed into
     ``CollaborativeServingEngine`` (which provides cfg, caches, the
-    boundary lattice ``_quant_boundary``, and the scheduler hooks)."""
+    boundary lattice ``_quant_boundary``, and the scheduler hooks) and
+    into the per-cut runtimes of ``serve.fleet``.  Every impl operates
+    over the *full* slot axis with a block table picking which slots'
+    pages are written — which is exactly what lets the fleet engine
+    verify many tenants' rounds in ONE batched call: tenants at the
+    same (cut, k) share the call, everyone else's rows ride along
+    masked to the dump page (``_PagedPool.table_for``)."""
 
     def _spec_fns(self, k: int):
         if k not in self._spec_jits:

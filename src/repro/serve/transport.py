@@ -135,6 +135,44 @@ class ServeStats:
     deadline_misses: int = 0
     queue_wait_s: float = 0.0
     stall_wait_s: float = 0.0
+    # pool-pressure snapshot (multi-tenant fleet serving): engines that
+    # own a ``kvcache._PagedPool`` refresh these each scheduler turn via
+    # ``observe_pool`` so benchmarks and the fairness policy read pool
+    # pressure off a stats snapshot instead of poking pool privates
+    pool_free_pages: int = -1          # -1 = engine has no paged pool
+    pool_utilization: float = 0.0
+    pool_utilization_peak: float = 0.0
+
+    def observe_pool(self, pool) -> None:
+        """Snapshot a ``_PagedPool``'s pressure (free pages, utilization,
+        peak utilization) onto this stats object."""
+        self.pool_free_pages = pool.free_pages()
+        self.pool_utilization = pool.utilization()
+        self.pool_utilization_peak = max(self.pool_utilization_peak,
+                                         self.pool_utilization)
+
+    @classmethod
+    def aggregate(cls, parts: Sequence["ServeStats"]) -> "ServeStats":
+        """Fleet-wide rollup of per-tenant stats: counters sum, the pool
+        snapshot (shared pool — identical on every tenant) carries the
+        worst case.  ``decode_bytes_log`` concatenates in input order."""
+        total = cls()
+        for p in parts:
+            for f in dataclasses.fields(cls):
+                if f.name == "decode_bytes_log":
+                    total.decode_bytes_log.extend(p.decode_bytes_log)
+                elif f.name == "pool_free_pages":
+                    total.pool_free_pages = (
+                        p.pool_free_pages if total.pool_free_pages < 0
+                        else min(total.pool_free_pages,
+                                 max(p.pool_free_pages, 0)))
+                elif f.name.startswith("pool_utilization"):
+                    setattr(total, f.name,
+                            max(getattr(total, f.name), getattr(p, f.name)))
+                else:
+                    setattr(total, f.name,
+                            getattr(total, f.name) + getattr(p, f.name))
+        return total
 
     def bytes_per_decode_token(self) -> float:
         """Decode *uplink* bytes per accepted token (PR 1/PR 2 metric)."""
@@ -185,6 +223,9 @@ class ServeStats:
             "deadline_misses": self.deadline_misses,
             "queue_wait_s": self.queue_wait_s,
             "stall_wait_s": self.stall_wait_s,
+            "pool_free_pages": self.pool_free_pages,
+            "pool_utilization": self.pool_utilization,
+            "pool_utilization_peak": self.pool_utilization_peak,
         }
 
 
