@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
@@ -41,6 +42,11 @@ DRIFT_TRACKED = {
     "BENCH_sharded_serve.json": ["speedup_vs_1dev.4"],
     "BENCH_fleet_serve.json": ["aggregate_speedup_vs_independent",
                                "dispatch_ratio"],
+    # sampled speculative decode: stochastic acceptance at T=1 and the
+    # e2e win over the serial sampled baseline (row keys are dot-free
+    # on purpose — see benchmarks/sampled_spec.py)
+    "BENCH_sampled_spec.json": ["acceptance.t10",
+                                "e2e_speedup_vs_serial.t10"],
 }
 DRIFT_RATIO = 2.0
 
@@ -99,12 +105,41 @@ def check_drift(committed: dict, fresh: dict,
     return failures
 
 
+def step_summary_table(committed: dict, fresh: dict,
+                       ratio: float = DRIFT_RATIO) -> str:
+    """Markdown drift-guard table (committed vs fresh, ratio, verdict)
+    for the GitHub Actions job summary.  Mirrors ``check_drift``'s
+    verdicts exactly: missing-fresh is a fail, unbaselined is a skip."""
+    lines = ["## Benchmark drift guard", "",
+             "| metric | committed | fresh | ratio | status |",
+             "|---|---:|---:|---:|---|"]
+    for fname, metrics in DRIFT_TRACKED.items():
+        for m in metrics:
+            name = f"`{fname.removeprefix('BENCH_').removesuffix('.json')}"\
+                   f":{m}`"
+            old = _lookup(committed.get(fname, {}), m)
+            new = _lookup(fresh.get(fname, {}), m)
+            if old is None:
+                lines.append(f"| {name} | — | — | — | skipped "
+                             f"(not baselined) |")
+            elif new is None:
+                lines.append(f"| {name} | {old:.3f} | missing | — | "
+                             f"FAIL |")
+            else:
+                r = new / old if old else float("inf")
+                verdict = "FAIL" if new < old / ratio else "ok"
+                lines.append(f"| {name} | {old:.3f} | {new:.3f} | "
+                             f"{r:.2f}x | {verdict} |")
+    return "\n".join(lines) + "\n"
+
+
 def main(quick: bool = False) -> None:
     from benchmarks import (adaptive_serve, chaos_serve, collab_decode,
                             fig3_breakdown, fleet_serve, kernel_bench,
                             optimized_decode, overload_serve, paged_decode,
-                            roofline, sharded_serve, spec_decode,
-                            table3_partition, table12_transmission)
+                            roofline, sampled_spec, sharded_serve,
+                            spec_decode, table3_partition,
+                            table12_transmission)
 
     # snapshot the committed headline numbers before any section
     # rewrites its BENCH file
@@ -181,6 +216,12 @@ def main(quick: bool = False) -> None:
                 for k, v in r["speculative"].items())
             + f";autotuned_k={r['autotuned_k']}")
 
+    section("sampled_spec", lambda: sampled_spec.run(quick=quick),
+            lambda r: ";".join(
+                f"{k}:acc={r['acceptance'][k]:.2f}/"
+                f"{r['e2e_speedup_vs_serial'][k]:.2f}x"
+                for k in r["acceptance"]))
+
     section("adaptive_serve", lambda: adaptive_serve.run(quick=quick),
             lambda r: f"vs_worst_fixed="
                       f"{r['adaptive_vs_worst_fixed_e2e_speedup']:.2f}x;"
@@ -223,6 +264,10 @@ def main(quick: bool = False) -> None:
         failures = check_drift(committed, fresh)
         for f in failures:
             print("FAIL", f)
+        summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+        if summary_path:
+            with open(summary_path, "a") as fp:
+                fp.write(step_summary_table(committed, fresh))
         if not failures:
             compared = sum(
                 1 for f, ms in DRIFT_TRACKED.items()

@@ -32,6 +32,10 @@ Run:  PYTHONPATH=src python examples/collaborative_serve.py
       heterogeneous links and per-tenant (cut, k) share ONE cloud
       engine — cross-tenant batched verify over a shared weight bank
       and KV page pool)
+      PYTHONPATH=src python examples/collaborative_serve.py --sample
+      (appends the temperature>0 demo: verify becomes exact rejection
+      sampling against the cloud distribution, seeded for bit-identical
+      replay; temperature=0 keeps the greedy fast path)
 """
 import argparse
 import os
@@ -166,7 +170,42 @@ def fleet_demo(params, cut_layer, n_tenants):
           f"utilization {agg.pool_utilization_peak:.0%}")
 
 
-def main(overload: bool = False, mesh_n: int = 1, fleet_n: int = 0):
+def sampling_demo(params, cut_layer):
+    """Temperature>0 serving: the verify step becomes exact rejection
+    sampling against the cloud distribution — outputs are distributed
+    exactly as non-speculative cloud sampling (tests/test_sampled_spec
+    holds the TV-distance gate), the speculative round structure and its
+    per-round RTT win are unchanged, and the per-request seed makes the
+    stream replay bit-identically across engines and restarts."""
+    from repro.serve.engine import SamplingParams
+    ch = Channel.from_kbps(500, rtt_ms=50)
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, CFG.vocab, 12).astype(np.int32)
+               for _ in range(4)]
+    sp = [SamplingParams(temperature=0.9, top_p=0.95, seed=i)
+          for i in range(4)]
+
+    def fresh():
+        return CollaborativeServingEngine(params, CFG, cut_layer=cut_layer,
+                                          channel=ch, max_len=64,
+                                          max_batch=4, spec_k=4)
+    a = fresh()
+    outs = a.generate(prompts, max_new_tokens=8, sampling=sp)
+    replay = fresh().generate(prompts, max_new_tokens=8, sampling=sp)
+    greedy = fresh().generate(prompts, max_new_tokens=8)
+    t0 = fresh().generate(prompts, max_new_tokens=8,
+                          sampling=[SamplingParams(temperature=0.0)] * 4)
+    print(f"\nsampled decode (T=0.9, top_p=0.95, k=4): draft acceptance "
+          f"{a.stats.acceptance_rate():.0%} under stochastic "
+          f"accept-with-prob-min(1,p/q) grading")
+    print(f"  seeded replay bit-identical across engines: {outs == replay}")
+    print(f"  temperature=0 request == greedy fast path: {t0 == greedy} "
+          f"(sampled rows never perturb greedy ones)")
+    print(f"  first sampled stream: {outs[0]}")
+
+
+def main(overload: bool = False, mesh_n: int = 1, fleet_n: int = 0,
+         sample: bool = False):
     print(f"model: {CFG.name} ({CFG.param_count() / 1e6:.1f}M params)")
     mesh = None
     if mesh_n > 1:
@@ -278,6 +317,10 @@ def main(overload: bool = False, mesh_n: int = 1, fleet_n: int = 0):
           f"{st.acceptance_rate():.0%}) — see benchmarks/adaptive_serve.py "
           f"for the drifting-channel win over fixed cuts")
 
+    # --- temperature>0 serving (opt-in: --sample) -----------------------
+    if sample:
+        sampling_demo(params, min(cut_layer, CFG.n_layers - 2))
+
     # --- overload robustness (opt-in: --overload) -----------------------
     if overload:
         overload_demo(params, min(cut_layer, CFG.n_layers - 2))
@@ -302,5 +345,10 @@ if __name__ == "__main__":
                          "with heterogeneous links share one cloud engine "
                          "(cross-tenant batched verify, shared weight "
                          "bank + KV page pool)")
+    ap.add_argument("--sample", action="store_true",
+                    help="append the temperature>0 demo: rejection-sampled "
+                         "verify (exact cloud distribution), seeded "
+                         "bit-identical replay, greedy fast-path parity")
     args = ap.parse_args()
-    main(overload=args.overload, mesh_n=args.mesh, fleet_n=args.fleet)
+    main(overload=args.overload, mesh_n=args.mesh, fleet_n=args.fleet,
+         sample=args.sample)

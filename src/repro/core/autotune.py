@@ -163,11 +163,15 @@ def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
                 ks: Sequence[int] = (1, 2, 4, 8, 16, 32),
                 return_bytes: float = 4.0, rows: int = 1,
                 cloud_layers: int = 0, cloud_act_bytes: float = 0.0,
+                draft_q_bytes: float = 0.0,
                 ) -> Tuple[SpecKPerf, List[SpecKPerf]]:
     """Pick the draft length k minimizing predicted time per accepted
     token for this channel/acceptance-rate — per-step flop/byte inputs
     are exactly ``collab_decode_step_time``'s, and the k=1 candidate
-    evaluates to exactly that non-speculative step."""
+    evaluates to exactly that non-speculative step.  ``draft_q_bytes``
+    (sampled traffic's shipped draft distributions, see
+    ``speculative_round_time``) makes large k pay its real uplink, so
+    hot sampling traffic tunes to a smaller k than greedy."""
     perfs = []
     for k in ks:
         bd = speculative_round_time(
@@ -175,8 +179,10 @@ def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
             blob_bytes=blob_bytes, edge=edge, cloud=cloud, channel=channel,
             draft_flops=draft_flops, acceptance=acceptance,
             return_bytes=return_bytes, rows=rows,
-            cloud_layers=cloud_layers, cloud_act_bytes=cloud_act_bytes)
-        uplink = k * blob_bytes + (k - 1) * TOK_BYTES * rows + MSG_BYTES
+            cloud_layers=cloud_layers, cloud_act_bytes=cloud_act_bytes,
+            draft_q_bytes=draft_q_bytes)
+        uplink = k * blob_bytes \
+            + (k - 1) * (TOK_BYTES * rows + draft_q_bytes) + MSG_BYTES
         perfs.append(SpecKPerf(
             k=k, breakdown=bd,
             uplink_bytes_per_token=uplink
@@ -185,13 +191,17 @@ def tune_spec_k(*, edge_flops: float, cloud_flops: float, blob_bytes: float,
     return best, perfs
 
 
-def lm_round_args(cfg, cut_layer: int, *, batch: int) -> dict:
+def lm_round_args(cfg, cut_layer: int, *, batch: int,
+                  sampled_frac: float = 0.0) -> dict:
     """Per-step flop/byte arguments of ``tune_spec_k`` /
     ``speculative_round_time`` for an ``LMConfig`` split at
     ``cut_layer``: INT8 edge prefix of ``cut_layer + 1`` blocks, FP32
     cloud suffix + head, Eq.(1)-framed ``[B, 1, D]`` boundary delta.
     The edge's draft model is the INT8 suffix copy, so ``draft_flops``
     equals the cloud suffix's per-step flops (run at INT8 throughput).
+    ``sampled_frac`` is the fraction of live slots decoding at
+    temperature>0: each such row ships its f32 draft distribution per
+    graded position (``draft_q_bytes`` — serve.spec's q-row uplink).
 
     This is the model half the online policy (``serve.policy``)
     re-evaluates against live telemetry — one dict per candidate cut,
@@ -204,6 +214,7 @@ def lm_round_args(cfg, cut_layer: int, *, batch: int) -> dict:
         cloud_flops=suffix, draft_flops=suffix,
         blob_bytes=batch * (cfg.d_model + QP_BYTES),
         return_bytes=TOK_BYTES * batch, rows=batch,
+        draft_q_bytes=sampled_frac * batch * cfg.vocab * 4.0,
         # TP all-reduce inputs: suffix depth and the [B, 1, D] f32
         # activation each of its blocks reduces (costmodel._tp_allreduce_s
         # charges them only when cloud.n_chips > 1 with a modeled link)
@@ -216,12 +227,14 @@ def spec_k_for_lm(cfg, cut_layer: int, *, batch: int, channel: Channel,
                   edge: DeviceModel = EDGE_TX2_CLASS,
                   cloud: DeviceModel = CLOUD_TITANXP_CLASS,
                   ks: Sequence[int] = (1, 2, 4, 8, 16),
+                  sampled_frac: float = 0.0,
                   ) -> Tuple[SpecKPerf, List[SpecKPerf]]:
     """``tune_spec_k`` with the per-step flops/bytes of ``lm_round_args``
     — what ``CollaborativeServingEngine(spec_k="auto")`` calls."""
     return tune_spec_k(edge=edge, cloud=cloud, channel=channel,
                        acceptance=acceptance, ks=ks,
-                       **lm_round_args(cfg, cut_layer, batch=batch))
+                       **lm_round_args(cfg, cut_layer, batch=batch,
+                                       sampled_frac=sampled_frac))
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +259,7 @@ def tune_cut_and_k(cfg, *, batch: int, channel: Channel,
                    edge: DeviceModel = EDGE_TX2_CLASS,
                    cloud: DeviceModel = CLOUD_TITANXP_CLASS,
                    ks: Sequence[int] = (1, 2, 4, 8, 16),
+                   sampled_frac: float = 0.0,
                    ) -> Tuple[CutKPerf, List[CutKPerf]]:
     """Algorithm 1's predict-then-pick loop over the joint grid of
     candidate partition points × speculative draft lengths, minimizing
@@ -261,7 +275,8 @@ def tune_cut_and_k(cfg, *, batch: int, channel: Channel,
     cut is a pointer swap (``serve.engine._CutBank``)."""
     perfs = []
     for cut in cuts:
-        args = lm_round_args(cfg, cut, batch=batch)
+        args = lm_round_args(cfg, cut, batch=batch,
+                             sampled_frac=sampled_frac)
         for k in ks:
             bd = speculative_round_time(
                 k=k, edge=edge, cloud=cloud, channel=channel,

@@ -203,7 +203,8 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
                            rows: int = 1,
                            msg_bytes: float = MSG_BYTES,
                            cloud_layers: int = 0,
-                           cloud_act_bytes: float = 0.0) -> PhaseBreakdown:
+                           cloud_act_bytes: float = 0.0,
+                           draft_q_bytes: float = 0.0) -> PhaseBreakdown:
     """Predicted cost of one speculative *draft/verify round* of length
     ``k`` (the flop/byte arguments are per-step quantities, exactly
     ``collab_decode_step_time``'s).
@@ -221,9 +222,16 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
     ``acceptance``, making ``per_token_s`` the quantity
     ``autotune.tune_spec_k`` minimizes.
 
+    ``draft_q_bytes`` prices sampled (temperature>0) traffic: the
+    rejection-sampling verify needs the draft's filtered distribution at
+    each of the k-1 graded positions, so the uplink grows by
+    ``(k-1) * draft_q_bytes`` per round (per-graded-position bytes, with
+    the batch rows already baked in — see ``autotune.lm_round_args``).
+    The default 0.0 keeps every greedy prediction bit-identical.
+
     ``k=1`` recovers ``collab_decode_step_time`` exactly: no draft
-    model, no mask, one delta, one token — the auto-tuner can always
-    fall back to today's serial step."""
+    model, no mask, one delta, one token, no shipped distributions — the
+    auto-tuner can always fall back to today's serial step."""
     edge_step = edge_flops / edge.peak_ops_int8 + edge.launch_overhead_s
     draft_step = draft_flops / edge.peak_ops_int8 + edge.launch_overhead_s
     edge_s = k * edge_step + (k * draft_step if k > 1 else 0.0)
@@ -231,7 +239,8 @@ def speculative_round_time(*, k: int, edge_flops: float, cloud_flops: float,
     cloud_s = (k * cloud_flops / (cloud.peak_flops_fp32 * cloud.n_chips)
                + cloud.launch_overhead_s
                + _tp_allreduce_s(cloud, cloud_layers, k * cloud_act_bytes))
-    uplink = k * blob_bytes + (k - 1) * TOK_BYTES * rows + msg_bytes
+    uplink = k * blob_bytes + (k - 1) * (TOK_BYTES * rows + draft_q_bytes) \
+        + msg_bytes
     downlink = return_bytes + msg_bytes \
         + (float(-(-k // 8)) * rows if k > 1 else 0.0)
     channel_s = (channel.transfer_time(uplink)

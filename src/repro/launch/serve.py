@@ -11,6 +11,11 @@ wireless channel.  ``--spec-k`` turns decode into draft/verify rounds
 (``auto`` self-corrects from measured acceptance between requests);
 ``--adaptive`` closes the whole tuning loop online — link telemetry
 re-tunes both the draft length and the cut layer while serving.
+
+``--temperature``/``--top-p``/``--sample-seed`` sample instead of
+greedy decode: verify becomes exact rejection sampling against the
+cloud distribution (outputs match non-speculative cloud sampling),
+and the per-request seeds make every stream replay bit-identically.
 """
 from __future__ import annotations
 
@@ -25,7 +30,8 @@ from repro.core.autotune import AutoTuner
 from repro.core.costmodel import (CLOUD_TITANXP_CLASS, Channel,
                                   EDGE_TX2_CLASS)
 from repro.models.transformer import init_lm, make_graph
-from repro.serve.engine import CollaborativeServingEngine, ServingEngine
+from repro.serve.engine import (CollaborativeServingEngine, SamplingParams,
+                                ServingEngine)
 
 
 def main(argv=None):
@@ -49,6 +55,16 @@ def main(argv=None):
                     help="online control loop: telemetry re-tunes spec_k "
                          "between rounds and the cut layer at admission "
                          "boundaries")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="decode temperature; 0 keeps the greedy fast "
+                         "path, >0 turns verify into exact rejection "
+                         "sampling against the cloud distribution")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus cutoff applied to the cloud "
+                         "distribution before sampling (1.0 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base PRNG seed; request i samples with "
+                         "seed+i so outputs replay bit-identically")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -62,8 +78,20 @@ def main(argv=None):
                for _ in range(args.requests)]
     spec_k = args.spec_k if args.spec_k == "auto" else int(args.spec_k)
     max_len = args.prompt_len + args.max_new + 24
+    # per-request seeds so every output stream replays bit-identically;
+    # temperature 0 stays on the greedy fast path (sampling=None)
+    sampling = None
+    if args.temperature > 0:
+        sampling = [SamplingParams(temperature=args.temperature,
+                                   top_p=args.top_p,
+                                   seed=args.sample_seed + i)
+                    for i in range(args.requests)]
 
     if not args.collaborative:
+        if sampling is not None:
+            raise SystemExit("--temperature>0 needs --collaborative: the "
+                             "rejection-sampling verify lives in the "
+                             "collaborative engine")
         eng = ServingEngine(params, cfg, max_batch=4, max_len=max_len)
         t0 = time.perf_counter()
         outs = eng.generate(prompts, max_new_tokens=args.max_new)
@@ -91,8 +119,14 @@ def main(argv=None):
     eng = CollaborativeServingEngine(
         params, cfg, cut_layer=cut_layer, channel=channel, max_len=max_len,
         spec_k=spec_k, policy="auto" if args.adaptive else None)
+    if sampling is not None:
+        print(f"sampling: temperature={args.temperature} "
+              f"top_p={args.top_p} seeds {args.sample_seed}.."
+              f"{args.sample_seed + args.requests - 1} "
+              f"(exact cloud distribution via rejection-sampled verify)")
     t0 = time.perf_counter()
-    outs = eng.generate(prompts, max_new_tokens=args.max_new)
+    outs = eng.generate(prompts, max_new_tokens=args.max_new,
+                        sampling=sampling)
     dt = time.perf_counter() - t0
     print(f"collaborative: {dt:.2f}s, int8 wire bytes "
           f"{eng.stats.transmitted_bytes / 1e3:.1f}KB "

@@ -27,7 +27,8 @@ from repro.serve.engine import (AdaptivePolicy, CollaborativeServingEngine,
                                 Decision, DriftingChannel, FaultyChannel,
                                 LinkTelemetry, PageAllocator, PoolExhausted,
                                 PressureSchedule, ReliableTransport, Request,
-                                ServeStats, ServingEngine, Transport)
+                                SamplingParams, ServeStats, ServingEngine,
+                                Transport)
 from repro.serve.faults import FaultOutcome
 from repro.serve.fleet import FleetServingEngine, TenantSpec
 from repro.serve.policy import FleetFairness
@@ -36,7 +37,8 @@ from repro.serve.resilience import ResilientCollaborativeEngine
 __all__ = ["ServingEngine", "CollaborativeServingEngine",
            "ResilientCollaborativeEngine", "FleetServingEngine",
            "TenantSpec", "FleetFairness", "PageAllocator", "PoolExhausted",
-           "ServeStats", "Request", "Transport", "ReliableTransport",
+           "ServeStats", "Request", "SamplingParams", "Transport",
+           "ReliableTransport",
            "CloudUnreachable", "LinkTelemetry", "DriftingChannel",
            "FaultyChannel", "FaultOutcome", "PressureSchedule",
            "AdaptivePolicy", "DeadlineAdmission", "Decision"]

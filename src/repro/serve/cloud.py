@@ -96,7 +96,11 @@ class ServingEngine(_SlotEngine):
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
 
-    def _admit(self, toks, plens, max_news, slots, cur, pos):
+    def _admit(self, toks, plens, max_news, slots, cur, pos, samplings=None):
+        assert not any(s is not None and s.sampled
+                       for s in (samplings or [])), \
+            "cloud-only baseline is greedy; sampled serving lives in " \
+            "CollaborativeServingEngine (serve.sampling)"
         if self.paged:
             bt_rows = self._pool.admit(slots, plens, max_news, toks.shape[1])
             self._cache, cur, pos = self._prefill(

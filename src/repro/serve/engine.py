@@ -44,8 +44,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CLOUD_TITANXP_CLASS, Channel
-from repro.core.quant import QuantParams, compute_qparams, dequantize, \
-    quantize
 from repro.models import layers as ML
 from repro.models import transformer as TF
 # re-export shims: the pre-split monolith lived at repro.serve.engine and
@@ -60,6 +58,8 @@ from repro.serve.scheduler import (Request, _bucket_len, _jit_phase,
                                    _SlotEngine)
 from repro.serve.faults import FaultyChannel, PressureSchedule
 from repro.serve.overload import _OverloadMixin
+from repro.serve.phases import _SplitPhases
+from repro.serve.sampling import SamplingParams
 from repro.serve.seedpath import _SeedPathMixin
 from repro.serve.sharding import place_collab_engine, tp_size
 from repro.serve.spec import _SpecDraftMixin
@@ -71,125 +71,11 @@ from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
 Params = Any
 
 __all__ = ["ServingEngine", "CollaborativeServingEngine", "PageAllocator",
-           "PoolExhausted", "ServeStats", "Request", "Transport",
-           "LinkTelemetry", "DriftingChannel", "AdaptivePolicy",
+           "PoolExhausted", "ServeStats", "Request", "SamplingParams",
+           "Transport", "LinkTelemetry", "DriftingChannel", "AdaptivePolicy",
            "DeadlineAdmission", "Decision", "FaultyChannel",
            "PressureSchedule", "ReliableTransport", "CloudUnreachable",
            "_MSG_BYTES", "_QP_BYTES", "_TOK_BYTES"]
-
-
-class _SplitPhases:
-    """The split-cache phase implementations (Eq.1/2 boundary lattice +
-    edge-prefix / cloud-suffix prefill and decode) of collaborative
-    serving, factored out of ``CollaborativeServingEngine`` so the
-    multi-tenant fleet engine (``serve.fleet``) can run the *identical*
-    math through its per-cut runtimes — one set of jitted phases per
-    served cut, shared by every tenant at that cut — without inheriting
-    the single-tenant scheduler.  Anything mixing this in provides:
-    ``cfg``, ``max_len``, ``a_bits``, ``edge_paged``/``edge_int8``/
-    ``cloud_paged``/``cloud_int8``, ``n_edge``/``n_cloud``,
-    ``_edge_qctx``, and ``trace_counts``."""
-
-    def _rope(self):
-        return ML.rope_table(self.max_len, self.cfg.hd,
-                             base=self.cfg.rope_base, dtype=self.cfg.dtype)
-
-    # -- Eq.(1)/(2) boundary lattice -----------------------------------------
-    def _quant_boundary(self, h: jax.Array, ranged: Optional[jax.Array] = None
-                        ) -> Tuple[jax.Array, QuantParams]:
-        """Per-row Eq.(1) framing of a boundary blob.  ``ranged``
-        overrides the tensor the thresholds are computed from (prefill
-        clamps bucket padding out of the min/max).  ``a_bits=None`` is
-        the lossless mode: the blob ships as-is under a unit lattice, so
-        ``dequantize`` is the identity bit for bit."""
-        if self.a_bits is None:
-            unit = QuantParams(scale=jnp.ones((h.shape[0],), jnp.float32),
-                               zero_point=jnp.zeros((h.shape[0],),
-                                                    jnp.float32),
-                               axis=0, bits=8, signed=True)
-            return h.astype(jnp.float32), unit
-        qp = compute_qparams(h if ranged is None else ranged, axis=0,
-                             bits=self.a_bits)
-        return quantize(h, qp), qp
-
-    # -- incremental split-cache phases --------------------------------------
-    def _edge_prefill_impl(self, blocks, embed, toks, cache, slots, bt_rows,
-                           plens):
-        self.trace_counts["prefill"] += 1
-        cfg = self.cfg
-        n, s = toks.shape
-        x = ML.embed(embed, toks).astype(cfg.dtype)
-        if self.edge_paged:
-            group = _paged_prefill_view(cache, self.n_edge, n, cfg.n_kv)
-            h, group = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
-                                     cache=group, cache_index=jnp.int32(0),
-                                     qctx=self._edge_qctx,
-                                     block_tables=bt_rows,
-                                     calibrate_kv=self.edge_int8,
-                                     kv_lengths=plens)
-            cache = _paged_prefill_merge(cache, group, slots)
-        else:
-            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_edge,
-                                  quantized=self.edge_int8)
-            h, small = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
-                                     cache=small, cache_index=jnp.int32(0),
-                                     qctx=self._edge_qctx)
-            cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
-                                   for k in ("k", "v")})
-        # Eq.(1), per batch row: each request gets its own thresholds, so
-        # one request's range never depends on its neighbours' activations
-        # — or on its own bucket padding (pad positions are clamped to a
-        # real activation before the min/max reduction; the padded tail
-        # never crosses the wire, see Transport.account_blob)
-        ranged = jnp.where(jnp.arange(s)[None, :, None] <
-                           plens[:, None, None], h, h[:, :1])
-        blob, qp = self._quant_boundary(h, ranged)
-        return blob, qp, cache
-
-    def _cloud_prefill_impl(self, blocks, tail, blob, qp, cache, slots,
-                            bt_rows, cur, pos, plens):
-        cfg = self.cfg
-        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
-        n = h.shape[0]
-        if self.cloud_paged:
-            group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
-            x, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                     cache=group, cache_index=jnp.int32(0),
-                                     block_tables=bt_rows,
-                                     calibrate_kv=self.cloud_int8,
-                                     kv_lengths=plens)
-            cache = _paged_prefill_merge(cache, group, slots)
-        else:
-            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud)
-            x, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                     cache=small, cache_index=jnp.int32(0))
-            cache = {k: cache[k].at[:, slots].set(small[k]) for k in cache}
-        logits = TF.lm_head(tail, x[jnp.arange(n), plens - 1][:, None])[:, 0]
-        cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
-        pos = pos.at[slots].set(plens)
-        return cache, cur, pos
-
-    def _edge_decode_impl(self, blocks, embed, cur, cache, pos, bt):
-        self.trace_counts["decode"] += 1
-        cfg = self.cfg
-        x = ML.embed(embed, cur[:, None]).astype(cfg.dtype)
-        h, cache = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
-                                 cache=cache, cache_index=pos,
-                                 qctx=self._edge_qctx, block_tables=bt)
-        # Eq.(1) per row: stale activations in idle/freed slots must not
-        # set the quant range of live requests' deltas
-        blob, qp = self._quant_boundary(h)
-        return blob, qp, cache                             # [B, 1, D] delta
-
-    def _cloud_decode_impl(self, blocks, tail, blob, qp, cache, pos, bt):
-        cfg = self.cfg
-        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
-        x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
-                                 cache=cache, cache_index=pos,
-                                 block_tables=bt)
-        logits = TF.lm_head(tail, x)[:, 0]
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
 
 
 class CollaborativeServingEngine(_SpecDraftMixin, _SeedPathMixin,
@@ -352,6 +238,16 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SeedPathMixin,
             # per-k jitted draft/verify (k is the scan length / q-block
             # width, a trace constant); built on first use of each k
             self._spec_jits: Dict[int, Tuple[Any, Any]] = {}
+        # per-slot sampling state (serve.sampling): host mirrors of each
+        # slot's (temperature, top_p, seed), refreshed at admission; the
+        # device copies are cached until the slot mix changes.  Jitted
+        # sampled phases are built lazily — all-greedy traffic never
+        # traces them and runs the original phases untouched.
+        self._samp_t = np.zeros((max_batch,), np.float32)
+        self._samp_p = np.ones((max_batch,), np.float32)
+        self._samp_s = np.zeros((max_batch,), np.int32)
+        self._samp_dev: Optional[Tuple[jax.Array, ...]] = None
+        self._samp_jits: Dict[str, Any] = {}
 
     # -- wire plumbing -------------------------------------------------------
     @property
@@ -426,8 +322,14 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SeedPathMixin,
     def _policy_tick(self, n_active: int) -> bool:
         if self.policy is None:
             return False
+        live = self._sched_active or {}
+        frac = (sum(1.0 for s in live if self._samp_t[s] > 0) / len(live)
+                if live else 0.0)
+        # kwarg only when sampled traffic exists: duck-typed policies
+        # predating sampling keep working on greedy workloads
+        kw = {"sampled_frac": frac} if frac > 0.0 else {}
         d = self.policy.decide(self.telemetry, cut=self.cut,
-                               spec_k=self.spec_k)
+                               spec_k=self.spec_k, **kw)
         if d.spec_k != self.spec_k:
             if self.policy.k_between_requests_only and n_active > 0:
                 pass                 # defer to the next drained tick
@@ -453,8 +355,44 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SeedPathMixin,
     # boundary lattice + split-cache phase impls: _SplitPhases (shared
     # with the per-cut runtimes of serve.fleet)
 
+    # -- sampling plumbing (serve.sampling) ---------------------------------
+    def _note_samplings(self, slots, samplings) -> None:
+        """Refresh the per-slot sampling mirrors at admission (a greedy
+        or ``None`` request zeroes its slot, so slot reuse can never
+        leak a previous tenant's temperature)."""
+        for i, s in enumerate(slots):
+            sp = None if samplings is None else samplings[i]
+            sp = sp if (sp is not None and sp.sampled) else None
+            self._samp_t[s] = sp.temperature if sp else 0.0
+            self._samp_p[s] = sp.top_p if sp else 1.0
+            self._samp_s[s] = sp.seed if sp else 0
+        self._samp_dev = None
+
+    def _samp_vecs(self) -> Tuple[jax.Array, ...]:
+        if self._samp_dev is None:
+            self._samp_dev = (jnp.asarray(self._samp_t),
+                              jnp.asarray(self._samp_p),
+                              jnp.asarray(self._samp_s))
+        return self._samp_dev
+
+    def _offsets(self) -> jax.Array:
+        """[max_batch] absolute output index each live slot's next round
+        starts at (its committed count) — what pins every sampled draw's
+        key to (seed, index, stream) across preemption/replay."""
+        off = np.zeros((self.max_batch,), np.int32)
+        for s, (_r, c) in (self._sched_active or {}).items():
+            off[s] = c
+        return jnp.asarray(off)
+
+    def _samp_jit(self, name: str, impl, donate=(), mesh=None):
+        if name not in self._samp_jits:
+            self._samp_jits[name] = _jit_phase(impl, donate=donate,
+                                               mesh=mesh)
+        return self._samp_jits[name]
+
     # -- scheduler hooks ----------------------------------------------------
-    def _admit(self, toks, plens, max_news, slots, cur, pos):
+    def _admit(self, toks, plens, max_news, slots, cur, pos, samplings=None):
+        self._note_samplings(slots, samplings)
         bt_rows = None
         if self._pool is not None:
             bt_rows = self._pool.admit(slots, plens,
@@ -468,9 +406,20 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SeedPathMixin,
         self.transport.account_blob(
             self.stats, blob, phase="prefill",
             row_elems=plens.astype(np.int64) * self.cfg.d_model)
-        self._cloud_cache, cur, pos = self._cloud_prefill(
-            self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
-            slots_j, bt_rows, cur, pos, plens_j)
+        if (self._samp_t[slots] > 0).any():
+            fn = self._samp_jit("cloud_prefill",
+                                self._cloud_prefill_sample_impl,
+                                donate=(4,), mesh=self.mesh)
+            self._cloud_cache, cur, pos = fn(
+                self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
+                slots_j, bt_rows, cur, pos, plens_j,
+                jnp.asarray(self._samp_t[slots]),
+                jnp.asarray(self._samp_p[slots]),
+                jnp.asarray(self._samp_s[slots]))
+        else:
+            self._cloud_cache, cur, pos = self._cloud_prefill(
+                self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
+                slots_j, bt_rows, cur, pos, plens_j)
         if self._spec_max > 1 and self.spec_k > 1:
             # requests served at k=1 never draft (and a later raise
             # drains them first — see _policy_tick), so the draft
@@ -494,30 +443,72 @@ class CollaborativeServingEngine(_SpecDraftMixin, _SeedPathMixin,
         self.transport.account_downlink(self.stats, n_active)
         return cur, pos
 
+    def _decode_all_sample(self, cur, pos, n_active):
+        """Serial (k=1) step with a sampled slot aboard: identical edge
+        pass and wire bytes, the committed token is the ``CLOUD``-stream
+        draw (greedy rows keep their argmax, bit for bit)."""
+        bt = self._pool.table_dev() if self._pool is not None else None
+        blob, qp, self._edge_cache = self._edge_decode(
+            self.edge_blocks, self.embed, cur, self._edge_cache, pos, bt)
+        self.transport.account_blob(self.stats, blob, phase="decode",
+                                    rows=n_active)
+        temps, top_ps, seeds = self._samp_vecs()
+        fn = self._samp_jit("cloud_decode", self._cloud_decode_sample_impl,
+                            donate=(4,), mesh=self.mesh)
+        cur, self._cloud_cache, pos = fn(
+            self.cloud_blocks, self.tail, blob, qp, self._cloud_cache, pos,
+            bt, temps, top_ps, seeds, self._offsets())
+        self.transport.account_downlink(self.stats, n_active)
+        return cur, pos
+
     def _round(self, cur, pos, slots):
+        sampled = bool((self._samp_t[slots] > 0).any())
         # k=1 is the fully-async serial step (PR 1's path, bit for bit)
         # whether or not draft machinery exists — drafting costs a full
         # local model pass per token, so it only runs when k > 1
         if self.spec_k == 1:
-            return super()._round(cur, pos, slots)
+            if not sampled:
+                return super()._round(cur, pos, slots)
+            cur, pos = self._decode_all_sample(cur, pos, len(slots))
+            return cur, pos, cur[:, None], None
         k, n_active = self.spec_k, len(slots)
         bt = self._pool.table_dev() if self._pool is not None else None
-        draft_fn, verify_fn = self._spec_fns(k)
-        blobs, scales, zps, drafts, self._edge_cache, self._draft_cache = \
-            draft_fn(self.edge_blocks, self.draft_blocks, self.embed,
-                     self.tail, cur, self._edge_cache, self._draft_cache,
-                     pos, bt)
+        if sampled:
+            temps, top_ps, seeds = self._samp_vecs()
+            offs = self._offsets()
+            draft_fn, verify_fn = self._spec_sample_fns(k)
+            (blobs, scales, zps, drafts, qs, self._edge_cache,
+             self._draft_cache) = draft_fn(
+                self.edge_blocks, self.draft_blocks, self.embed, self.tail,
+                cur, self._edge_cache, self._draft_cache, pos, bt, temps,
+                top_ps, seeds, offs)
+        else:
+            draft_fn, verify_fn = self._spec_fns(k)
+            (blobs, scales, zps, drafts, self._edge_cache,
+             self._draft_cache) = draft_fn(
+                self.edge_blocks, self.draft_blocks, self.embed, self.tail,
+                cur, self._edge_cache, self._draft_cache, pos, bt)
         # one uplink message: k per-row-framed [1, D] deltas + the k-1
-        # graded drafts, amortizing the header (and the RTT) over a round
+        # graded drafts, amortizing the header (and the RTT) over a round;
+        # a sampled row additionally ships the k-1 graded positions' f32
+        # draft distributions the rejection test needs
+        # (costmodel.speculative_round_time prices this as draft_q_bytes)
+        n_samp = int((self._samp_t[slots] > 0).sum())
         self.transport.charge(
             self.stats,
             n_active * (k * (self.cfg.d_model * blobs.dtype.itemsize
                              + _QP_BYTES)
-                        + (k - 1) * _TOK_BYTES) + _MSG_BYTES,
+                        + (k - 1) * _TOK_BYTES) + _MSG_BYTES
+            + n_samp * (k - 1) * self.cfg.vocab * 4,
             phase="decode")
-        toks, n_commit, cur, self._cloud_cache, pos = verify_fn(
-            self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
-            self._cloud_cache, pos, bt)
+        if sampled:
+            toks, n_commit, cur, self._cloud_cache, pos = verify_fn(
+                self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
+                qs, self._cloud_cache, pos, bt, temps, top_ps, seeds, offs)
+        else:
+            toks, n_commit, cur, self._cloud_cache, pos = verify_fn(
+                self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
+                self._cloud_cache, pos, bt)
         # the edge needs the accept counts to schedule the next round, so
         # this sync is part of the protocol, not a host-loop artifact
         counts = np.asarray(n_commit)

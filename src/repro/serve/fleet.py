@@ -27,6 +27,17 @@ established, so per-slot streams stay independent — in lossless
 same tenant served alone (property-tested in
 ``tests/test_fleet_serve.py``).
 
+Temperature>0 requests ride the same group rounds through the sampled
+phase twins (``sampling.SamplingParams`` per request): a group with at
+least one sampled slot drafts with per-slot seeded streams and verifies
+by rejection sampling, while greedy slots in the same call stay on the
+argmax branch bit for bit.  Seed keys depend only on (seed, absolute
+output index, stream), never on co-tenants or slot number — a tenant's
+sampled stream is the same whether it shares the batch or runs solo.
+Sampled rows additionally ship the drafter's k-1 filtered q rows
+uplink (charged to the owning tenant at f32 vocab width; see
+``costmodel.speculative_round_time(draft_q_bytes=...)``).
+
 Cross-tenant fairness extends PR 6's overload discipline: admission
 orders eligible requests by ``policy.FleetFairness`` (priority, then
 weighted virtual service, then FIFO), per-tenant page quotas bound a
@@ -34,15 +45,17 @@ hot tenant's pool claim, and a mid-round ``PoolExhausted`` preempts
 the tenant most over its fair page share first (then PR 6's
 lowest-priority / most-remaining rule) with the scheduler's
 replay-based resume.  Per-tenant re-tuning runs through per-tenant
-``AdaptivePolicy`` instances; a cut or draft-length switch applies at
-the *tenant's own* drained boundary — other tenants never pay a
-fleet-wide drain barrier for one edge's re-partition.
+``AdaptivePolicy`` instances (fed each tenant's own sampled-traffic
+fraction); a cut or draft-length switch applies at the *tenant's own*
+drained boundary — other tenants never pay a fleet-wide drain barrier
+for one edge's re-partition.
+
+``TenantSpec`` and the per-cut runtime live in ``serve.tenant``.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -50,156 +63,19 @@ import numpy as np
 from repro.core.costmodel import Channel
 from repro.models import layers as ML
 from repro.models import transformer as TF
-from repro.serve.engine import _SplitPhases
 from repro.serve.kvcache import PoolExhausted, _PagedPool
 from repro.serve.policy import AdaptivePolicy, FleetFairness, _CutBank
-from repro.serve.scheduler import Request, _bucket_len, _jit_phase, \
-    _remove_is, _SlotEngine
-from repro.serve.spec import _SpecDraftMixin
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
+from repro.serve.tenant import (TenantSpec, _CutRuntime, _FleetAdmitMixin,
+                                _Tenant)
 from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
-                                   ServeStats, Transport)
+                                   ServeStats)
 
 __all__ = ["TenantSpec", "FleetServingEngine"]
 
 
-@dataclasses.dataclass
-class TenantSpec:
-    """One edge of the fleet: its link, its partition, its share.
-
-    ``policy="auto"`` gives the tenant its own ``AdaptivePolicy`` over
-    its own telemetry (candidate cuts default to the engine grid
-    {0, mid, last-1} ∪ {cut_layer}); switches apply at the tenant's
-    drained boundary.  ``weight`` is the tenant's share under
-    ``FleetFairness``; ``max_pages`` is an optional hard KV page quota
-    (None = uncapped — fairness then comes from admission ordering and
-    over-share-first preemption alone)."""
-    name: str
-    channel: Any = None
-    cut_layer: int = 0
-    spec_k: int = 1
-    weight: float = 1.0
-    max_pages: Optional[int] = None
-    policy: Union[AdaptivePolicy, str, None] = None
-
-
-class _Tenant:
-    """Runtime state of one edge: transport (channel + telemetry),
-    stats, current (cut, spec_k), pending re-tune decision."""
-
-    def __init__(self, spec: TenantSpec, policy: Optional[AdaptivePolicy]):
-        self.name = spec.name
-        self.spec = spec
-        self.transport = Transport(spec.channel)
-        self.stats = ServeStats()
-        self.cut = spec.cut_layer
-        self.spec_k = spec.spec_k
-        self.policy = policy
-        self.pending = None          # Decision awaiting a drained boundary
-        self.hold = False            # pause this tenant's admission
-
-    @property
-    def telemetry(self):
-        return self.transport.telemetry
-
-    def now(self) -> float:
-        return float(getattr(self.transport.channel, "clock_s", 0.0))
-
-    def wait(self, seconds: float) -> bool:
-        s = float(seconds)
-        if s <= 0:
-            return True
-        w = getattr(self.transport.channel, "wait", None)
-        if w is None:
-            return False             # clockless channel
-        w(s)
-        self.stats.stall_wait_s += s
-        return True
-
-
-class _CutRuntime(_SpecDraftMixin, _SplitPhases):
-    """Per-cut serving runtime: the jitted split-cache phases plus the
-    edge/cloud/draft caches for one cut, shared by *every* tenant served
-    at that cut.  Weights come out of the fleet's shared ``_CutBank``
-    (pointer swap — building a runtime never requantizes); the caches
-    index the fleet's single ``_PagedPool``, so all cuts see identical
-    page geometry and one slot's pages mean the same thing in every
-    runtime (writes from slots outside a phase call's group are masked
-    to the dump page via ``table_for``)."""
-
-    def __init__(self, fleet: "FleetServingEngine", cut: int):
-        cfg = fleet.cfg
-        self.cfg = cfg
-        self.max_len = fleet.max_len
-        self.max_batch = fleet.max_batch
-        self.page_size = fleet.page_size
-        self.a_bits = fleet.a_bits
-        self.edge_paged = self.cloud_paged = True
-        self.edge_int8 = fleet.edge_int8
-        self.cloud_int8 = fleet.cloud_int8
-        self._edge_qctx = fleet._edge_qctx
-        self.trace_counts = fleet.trace_counts
-        self.mesh = None
-        self.cut = cut
-        self.n_edge = cut + 1
-        self.n_cloud = cfg.n_layers - self.n_edge
-        self.edge_blocks, self.cloud_blocks, self.draft_blocks = \
-            fleet._bank.get(cut)
-        n_pool = fleet._pool.allocator.num_pages
-        self._edge_cache = TF.init_cache(
-            cfg, fleet.max_batch, fleet.max_len, layers=self.n_edge,
-            paged=True, quantized=self.edge_int8,
-            page_size=fleet.page_size, num_pages=n_pool)
-        self._cloud_cache = TF.init_cache(
-            cfg, fleet.max_batch, fleet.max_len, layers=self.n_cloud,
-            paged=True, quantized=self.cloud_int8,
-            page_size=fleet.page_size, num_pages=n_pool)
-        self._spec_max = fleet._spec_max
-        self._edge_prefill = _jit_phase(self._edge_prefill_impl, donate=(3,))
-        self._cloud_prefill = _jit_phase(self._cloud_prefill_impl,
-                                         donate=(4,))
-        self._edge_decode = _jit_phase(self._edge_decode_impl, donate=(3,))
-        self._cloud_decode = _jit_phase(self._cloud_decode_merge_impl,
-                                        donate=(4,))
-        if self._spec_max > 1:
-            self._draft_cache = TF.init_cache(
-                cfg, fleet.max_batch, fleet.max_len, layers=self.n_cloud,
-                paged=True, quantized=self.edge_int8,
-                page_size=fleet.page_size, num_pages=n_pool)
-            self._draft_prefill = _jit_phase(self._draft_prefill_impl,
-                                             donate=(3,))
-            self._spec_jits: Dict[int, Tuple[Any, Any]] = {}
-            self._fleet_jits: Dict[int, Tuple[Any, Any]] = {}
-
-    # Fleet variants of the round phases: the group-masked merge of the
-    # round's cur/pos back into the fleet's global arrays happens INSIDE
-    # the jitted phase (one dispatch per round), not as follow-up eager
-    # gathers/scatters — those recompile per group size and on a small
-    # model cost more than the round's own compute.
-    def _cloud_decode_merge_impl(self, blocks, tail, blob, qp, cache, pos,
-                                 bt, cur, gmask):
-        nxt, cache, npos = self._cloud_decode_impl(blocks, tail, blob, qp,
-                                                   cache, pos, bt)
-        return (jnp.where(gmask, nxt, cur), cache,
-                jnp.where(gmask, npos, pos))
-
-    def _verify_merge_impl(self, k, blocks, tail, blobs, scales, zps,
-                           drafts, cache, pos, bt, cur, gmask):
-        t, n_commit, ncur, cache, npos = self._verify_impl(
-            k, blocks, tail, blobs, scales, zps, drafts, cache, pos, bt)
-        return (t, n_commit, jnp.where(gmask, ncur, cur), cache,
-                jnp.where(gmask, npos, pos))
-
-    def _fleet_spec_fns(self, k: int):
-        if k not in self._fleet_jits:
-            draft = _jit_phase(partial(self._spec_draft_impl, k),
-                               donate=(5, 6))
-            verify = _jit_phase(partial(self._verify_merge_impl, k),
-                                donate=(6,))
-            self._fleet_jits[k] = (draft, verify)
-        return self._fleet_jits[k]
-
-
-class FleetServingEngine:
+class FleetServingEngine(_FleetAdmitMixin):
     """One cloud, N edges: continuous batching over a shared slot table
     with cross-tenant batched verify rounds (see the module docstring).
 
@@ -288,6 +164,12 @@ class FleetServingEngine:
         # (the masked cur/pos merge itself runs inside the jitted
         # round phases, see ``_CutRuntime._cloud_decode_merge_impl``)
         self._gmasks: Dict[Tuple[int, ...], Any] = {}
+        # per-slot sampling state (host mirror of each live request's
+        # SamplingParams; see _FleetAdmitMixin._note_samplings)
+        self._samp_t = np.zeros((max_batch,), np.float32)
+        self._samp_p = np.ones((max_batch,), np.float32)
+        self._samp_s = np.zeros((max_batch,), np.int32)
+        self._samp_dev: Optional[Tuple[Any, Any, Any]] = None
         # scheduler-internal live view (mirrors _SlotEngine's)
         self._sched_active = None
         self._sched_committed = None
@@ -303,12 +185,20 @@ class FleetServingEngine:
             [t.stats for t in self._tenants.values()])
 
     def generate(self, prompts: Dict[str, List[np.ndarray]], *,
-                 max_new_tokens: int = 16) -> Dict[str, List[List[int]]]:
-        """Greedy-decode per-tenant prompt lists with cross-tenant
-        continuous batching; returns token streams per tenant in input
-        order."""
+                 max_new_tokens: int = 16,
+                 sampling=None) -> Dict[str, List[List[int]]]:
+        """Decode per-tenant prompt lists with cross-tenant continuous
+        batching; returns token streams per tenant in input order.
+        ``sampling`` is None (greedy), one ``SamplingParams`` applied to
+        every prompt, or a dict mapping tenant name to either one
+        ``SamplingParams`` or a per-prompt list."""
+        def _samp(name: str, i: int) -> Optional[SamplingParams]:
+            s = (sampling.get(name) if isinstance(sampling, dict)
+                 else sampling)
+            return s[i] if isinstance(s, (list, tuple)) else s
         reqs = {name: [Request(uid=i, prompt=np.asarray(p),
-                               max_new_tokens=max_new_tokens)
+                               max_new_tokens=max_new_tokens,
+                               sampling=_samp(name, i))
                        for i, p in enumerate(ps)]
                 for name, ps in prompts.items()}
         return self.generate_requests(reqs)
@@ -338,18 +228,18 @@ class FleetServingEngine:
             self._runtimes[cut] = _CutRuntime(self, cut)
         return self._runtimes[cut]
 
-    def _reserve(self, max_news: np.ndarray) -> np.ndarray:
-        head = self._spec_max - 1
-        if self.demand_paged:
-            return np.minimum(max_news + head, self._spec_max)
-        return max_news + head
-
     def _tenant_tick(self, t: _Tenant, n_active: int) -> None:
         """One control-loop turn for one tenant: re-decide (cut, k) from
         its telemetry; apply at its own drained boundary, holding only
         *its* admission while its slots drain (no fleet-wide barrier)."""
         if t.policy is not None:
-            d = t.policy.decide(t.telemetry, cut=t.cut, spec_k=t.spec_k)
+            live = [s for s, (r, _c) in (self._sched_active or {}).items()
+                    if r.tenant == t.name]
+            frac = (sum(1 for s in live if self._samp_t[s] > 0)
+                    / len(live) if live else 0.0)
+            kw = {"sampled_frac": frac} if frac > 0.0 else {}
+            d = t.policy.decide(t.telemetry, cut=t.cut, spec_k=t.spec_k,
+                                **kw)
             t.pending = d if (d.cut, d.spec_k) != (t.cut, t.spec_k) else None
         if t.pending is None:
             t.hold = False
@@ -366,11 +256,6 @@ class FleetServingEngine:
             t.stats.spec_k_switches += 1
         t.pending = None
         t.hold = False
-
-    def _quota_blocked(self, tenant: str, pending: int, needed: int) -> bool:
-        q = self.fairness.quotas.get(tenant)
-        return q is not None and \
-            self._pool.owner_pages(tenant) + pending + needed > q
 
     def _run(self, reqs: List[Request]) -> None:
         queue: List[Request] = list(reqs)
@@ -507,143 +392,6 @@ class FleetServingEngine:
                 r.out_tokens.extend(int(t) for t in all_toks[s, col:col + n])
             col += toks_r.shape[1]
 
-    # -- admission -----------------------------------------------------------
-    def _admit_turn(self, queue, active, free, cur, pos, rounds):
-        """One admission turn: fair-ordered eligible requests grouped by
-        (cut, bucket) into batched prefill calls over the shared slot
-        table.  Returns (admitted_any, cur, pos, first_blocked_request).
-        A quota-blocked request is skipped — its tenant waits without
-        blocking the others (and never seeds a group); a pool-wide
-        shortfall ends the turn (retirements must return pages first)."""
-        admitted = False
-        stalled: Optional[Request] = None
-        while free:
-            elig = [r for r in queue
-                    if not self._tenants[r.tenant].hold
-                    and r.arrival_s <= self._tenants[r.tenant].now() + 1e-12]
-            elig.sort(key=self.fairness.admission_key)
-            group: List[Request] = []
-            rows: List[np.ndarray] = []
-            slots: List[int] = []
-            shapes: List[Tuple[int, int]] = []
-            pending_pages: Dict[str, int] = {}
-            gcut = gbucket = None
-            pool_short = False
-            for r in elig:
-                if not free:
-                    break
-                t = self._tenants[r.tenant]
-                bucket = _bucket_len(_SlotEngine._eff_plen(self, r),
-                                     self.max_len)
-                if gcut is not None and (t.cut, bucket) != (gcut, gbucket):
-                    continue
-                row = _SlotEngine._eff_prompt(r)
-                eff_new = (r.max_new_tokens if r._parked is None
-                           else r.max_new_tokens - len(r._parked) + 1)
-                assert (len(row) + eff_new + self._spec_max - 1) \
-                    <= self.max_len, \
-                    "prompt + generation (+ draft headroom) exceeds max_len"
-                needed = self._pool.pages_needed(
-                    len(row), int(self._reserve(np.int64(eff_new))),
-                    bucket)
-                if self._quota_blocked(r.tenant,
-                                       pending_pages.get(r.tenant, 0),
-                                       needed):
-                    stalled = stalled or r
-                    continue
-                if sum(self._pool.pages_needed(
-                        p, int(self._reserve(np.int64(m))), bucket)
-                        for p, m in shapes) + needed \
-                        > self._pool.free_pages():
-                    stalled = stalled or r
-                    pool_short = True
-                    break
-                if gcut is None:
-                    gcut, gbucket = t.cut, bucket
-                pending_pages[r.tenant] = \
-                    pending_pages.get(r.tenant, 0) + needed
-                shapes.append((len(row), eff_new))
-                group.append(r)
-                rows.append(row)
-                slots.append(free.pop(0))
-            if not group:
-                break
-            for r in group:
-                _remove_is(queue, r)
-            cur, pos = self._admit_group(group, rows, slots, shapes,
-                                         gcut, gbucket, cur, pos, rounds,
-                                         active)
-            admitted = True
-            if pool_short:
-                break
-        return admitted, cur, pos, stalled
-
-    def _admit_group(self, group, rows, slots, shapes, cut, bucket, cur,
-                     pos, rounds, active):
-        """Batched prefill of one (cut, bucket) admission group — rows
-        may span tenants; each tenant's wire is charged separately."""
-        runtime = self._runtime(cut)
-        toks = np.zeros((len(group), bucket), np.int32)
-        for i, row in enumerate(rows):
-            toks[i, :len(row)] = row
-        plens = np.asarray([len(row) for row in rows], np.int32)
-        reserves = self._reserve(
-            np.asarray([m for _, m in shapes], np.int64))
-        # pool admission per tenant-run (owner tagging), one table read
-        i = 0
-        while i < len(group):
-            j = i
-            while j < len(group) and group[j].tenant == group[i].tenant:
-                j += 1
-            self._pool.admit(slots[i:j], plens[i:j], reserves[i:j], bucket,
-                             owner=group[i].tenant)
-            i = j
-        bt_rows = self._pool.rows(np.asarray(slots, np.int32), bucket)
-        slots_j = jnp.asarray(np.asarray(slots, np.int32))
-        plens_j = jnp.asarray(plens)
-        blob, qp, runtime._edge_cache = runtime._edge_prefill(
-            runtime.edge_blocks, self.embed, jnp.asarray(toks),
-            runtime._edge_cache, slots_j, bt_rows, plens_j)
-        runtime._cloud_cache, cur, pos = runtime._cloud_prefill(
-            runtime.cloud_blocks, self.tail, blob, qp,
-            runtime._cloud_cache, slots_j, bt_rows, cur, pos, plens_j)
-        drafting = any(self._tenants[r.tenant].spec_k > 1 for r in group)
-        if self._spec_max > 1 and drafting:
-            runtime._draft_cache = runtime._draft_prefill(
-                runtime.draft_blocks, blob, qp, runtime._draft_cache,
-                slots_j, bt_rows, plens_j)
-        # per-tenant wire accounting over the group's rows
-        for name in {r.tenant for r in group}:
-            t = self._tenants[name]
-            idx = [i for i, r in enumerate(group) if r.tenant == name]
-            t.transport.account_blob(
-                t.stats, blob, phase="prefill",
-                row_elems=plens[idx].astype(np.int64) * self.cfg.d_model)
-            t.transport.account_downlink(t.stats, len(idx),
-                                         phase="prefill")
-            t.stats.prefill_calls += 1
-            t.stats.prefill_tokens += int(plens[idx].sum())
-        # resumed requests: pin the stream to the parked tokens
-        resumes = [(s, r) for r, s in zip(group, slots)
-                   if r._parked is not None]
-        if resumes:
-            rs = jnp.asarray([s for s, _ in resumes], jnp.int32)
-            lasts = jnp.asarray([int(r._parked[-1]) for _, r in resumes],
-                                jnp.int32)
-            cur = cur.at[rs].set(lasts)
-        fresh = [(r, s, 1) for r, s in zip(group, slots)
-                 if r._parked is None]
-        if fresh:
-            rounds.append((cur[:, None], fresh))
-        for r, s in zip(group, slots):
-            t = self._tenants[r.tenant]
-            active[s] = (r, 1 if r._parked is None else len(r._parked))
-            if r.admit_s is None:
-                r.admit_s = t.now()
-            t.stats.queue_wait_s += max(0.0, t.now() - r._enq_s)
-            r._parked = None
-        return cur, pos
-
     # -- the cross-tenant batched round --------------------------------------
     def _group_round(self, runtime, k, slots_g, cur, pos, active, rounds):
         """Advance one (cut, k) group of live slots — possibly spanning
@@ -651,7 +399,10 @@ class FleetServingEngine:
         decode (k=1) or one k-step draft scan plus **one** multi-token
         verify over the shared paged pool.  Slots outside the group are
         masked to the dump page; only the group's rows merge back into
-        the fleet's cur/pos."""
+        the fleet's cur/pos.  A group with any temperature>0 slot rides
+        the sampled phase twins; its greedy rows stay bit-identical to
+        the greedy path, and sampled rows' q uplink is charged to the
+        owning tenant."""
         self.round_calls += 1
         by_tenant: Dict[str, List[int]] = {}
         for s in slots_g:
@@ -663,6 +414,10 @@ class FleetServingEngine:
             gm = np.zeros((self.max_batch,), np.bool_)
             gm[list(gkey)] = True
             gmask = self._gmasks[gkey] = jnp.asarray(gm)
+        sampled = bool((self._samp_t[slots_g] > 0).any())
+        if sampled:
+            temps, top_ps, seeds = self._samp_vecs()
+            offs = self._offsets()
         if k == 1:
             blob, qp, runtime._edge_cache = runtime._edge_decode(
                 runtime.edge_blocks, self.embed, cur, runtime._edge_cache,
@@ -671,32 +426,58 @@ class FleetServingEngine:
                 t = self._tenants[name]
                 t.transport.account_blob(t.stats, blob, phase="decode",
                                          rows=len(srows))
-            cur, runtime._cloud_cache, pos = runtime._cloud_decode(
-                runtime.cloud_blocks, self.tail, blob, qp,
-                runtime._cloud_cache, pos, bt, cur, gmask)
+            if sampled:
+                fn = runtime._samp_jit(
+                    "cloud_decode", runtime._cloud_decode_sample_merge_impl,
+                    donate=(4,))
+                cur, runtime._cloud_cache, pos = fn(
+                    runtime.cloud_blocks, self.tail, blob, qp,
+                    runtime._cloud_cache, pos, bt, temps, top_ps, seeds,
+                    offs, cur, gmask)
+            else:
+                cur, runtime._cloud_cache, pos = runtime._cloud_decode(
+                    runtime.cloud_blocks, self.tail, blob, qp,
+                    runtime._cloud_cache, pos, bt, cur, gmask)
             for name, srows in by_tenant.items():
                 t = self._tenants[name]
                 t.transport.account_downlink(t.stats, len(srows))
             counts = None
             toks_block = cur[:, None]
         else:
-            draft_fn, verify_fn = runtime._fleet_spec_fns(k)
-            blobs, scales, zps, drafts, runtime._edge_cache, \
-                runtime._draft_cache = draft_fn(
-                    runtime.edge_blocks, runtime.draft_blocks, self.embed,
-                    self.tail, cur, runtime._edge_cache,
-                    runtime._draft_cache, pos, bt)
+            if sampled:
+                draft_fn, verify_fn = runtime._fleet_spec_sample_fns(k)
+                blobs, scales, zps, drafts, qs, runtime._edge_cache, \
+                    runtime._draft_cache = draft_fn(
+                        runtime.edge_blocks, runtime.draft_blocks,
+                        self.embed, self.tail, cur, runtime._edge_cache,
+                        runtime._draft_cache, pos, bt, temps, top_ps,
+                        seeds, offs)
+            else:
+                draft_fn, verify_fn = runtime._fleet_spec_fns(k)
+                blobs, scales, zps, drafts, runtime._edge_cache, \
+                    runtime._draft_cache = draft_fn(
+                        runtime.edge_blocks, runtime.draft_blocks,
+                        self.embed, self.tail, cur, runtime._edge_cache,
+                        runtime._draft_cache, pos, bt)
             for name, srows in by_tenant.items():
                 t = self._tenants[name]
+                n_samp = int((self._samp_t[srows] > 0).sum())
                 t.transport.charge(
                     t.stats,
                     len(srows) * (k * (self.cfg.d_model
                                        * blobs.dtype.itemsize + _QP_BYTES)
-                                  + (k - 1) * _TOK_BYTES) + _MSG_BYTES,
+                                  + (k - 1) * _TOK_BYTES)
+                    + n_samp * (k - 1) * self.cfg.vocab * 4 + _MSG_BYTES,
                     phase="decode")
-            toks, n_commit, cur, runtime._cloud_cache, pos = verify_fn(
-                runtime.cloud_blocks, self.tail, blobs, scales, zps,
-                drafts, runtime._cloud_cache, pos, bt, cur, gmask)
+            if sampled:
+                toks, n_commit, cur, runtime._cloud_cache, pos = verify_fn(
+                    runtime.cloud_blocks, self.tail, blobs, scales, zps,
+                    drafts, qs, runtime._cloud_cache, pos, bt, temps,
+                    top_ps, seeds, offs, cur, gmask)
+            else:
+                toks, n_commit, cur, runtime._cloud_cache, pos = verify_fn(
+                    runtime.cloud_blocks, self.tail, blobs, scales, zps,
+                    drafts, runtime._cloud_cache, pos, bt, cur, gmask)
             counts = np.asarray(n_commit)
             for name, srows in by_tenant.items():
                 t = self._tenants[name]

@@ -1,0 +1,181 @@
+"""The split-cache phase implementations (Eq.1/2 boundary lattice +
+edge-prefix / cloud-suffix prefill and decode) of collaborative
+serving, factored out of ``CollaborativeServingEngine`` so the
+multi-tenant fleet engine (``serve.fleet``) can run the *identical*
+math through its per-cut runtimes — one set of jitted phases per
+served cut, shared by every tenant at that cut — without inheriting
+the single-tenant scheduler.  Anything mixing ``_SplitPhases`` in
+provides: ``cfg``, ``max_len``, ``a_bits``, ``edge_paged``/
+``edge_int8``/``cloud_paged``/``cloud_int8``, ``n_edge``/``n_cloud``,
+``_edge_qctx``, and ``trace_counts``.
+
+The ``*_sample_impl`` variants are the temperature>0 cloud phases
+(``serve.sampling``): identical suffix math, but the emitted token is a
+seeded categorical draw from the row's filtered distribution instead of
+the argmax.  Greedy rows (``temps <= 0``) riding in a mixed batch take
+the argmax branch inside the same jitted call, so their streams stay
+bit-identical to the pre-sampling phases.  Engines only dispatch these
+variants when a live slot actually samples — all-greedy traffic runs
+the original phases untouched."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantParams, compute_qparams, dequantize, \
+    quantize
+from repro.models import layers as ML
+from repro.models import transformer as TF
+from repro.serve import sampling as S
+from repro.serve.kvcache import _paged_prefill_merge, _paged_prefill_view
+
+__all__ = ["_SplitPhases"]
+
+
+class _SplitPhases:
+    """See the module docstring."""
+
+    def _rope(self):
+        return ML.rope_table(self.max_len, self.cfg.hd,
+                             base=self.cfg.rope_base, dtype=self.cfg.dtype)
+
+    # -- Eq.(1)/(2) boundary lattice -----------------------------------------
+    def _quant_boundary(self, h: jax.Array, ranged: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, QuantParams]:
+        """Per-row Eq.(1) framing of a boundary blob.  ``ranged``
+        overrides the tensor the thresholds are computed from (prefill
+        clamps bucket padding out of the min/max).  ``a_bits=None`` is
+        the lossless mode: the blob ships as-is under a unit lattice, so
+        ``dequantize`` is the identity bit for bit."""
+        if self.a_bits is None:
+            unit = QuantParams(scale=jnp.ones((h.shape[0],), jnp.float32),
+                               zero_point=jnp.zeros((h.shape[0],),
+                                                    jnp.float32),
+                               axis=0, bits=8, signed=True)
+            return h.astype(jnp.float32), unit
+        qp = compute_qparams(h if ranged is None else ranged, axis=0,
+                             bits=self.a_bits)
+        return quantize(h, qp), qp
+
+    # -- incremental split-cache phases --------------------------------------
+    def _edge_prefill_impl(self, blocks, embed, toks, cache, slots, bt_rows,
+                           plens):
+        self.trace_counts["prefill"] += 1
+        cfg = self.cfg
+        n, s = toks.shape
+        x = ML.embed(embed, toks).astype(cfg.dtype)
+        if self.edge_paged:
+            group = _paged_prefill_view(cache, self.n_edge, n, cfg.n_kv)
+            h, group = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
+                                     cache=group, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx,
+                                     block_tables=bt_rows,
+                                     calibrate_kv=self.edge_int8,
+                                     kv_lengths=plens)
+            cache = _paged_prefill_merge(cache, group, slots)
+        else:
+            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_edge,
+                                  quantized=self.edge_int8)
+            h, small = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
+                                     cache=small, cache_index=jnp.int32(0),
+                                     qctx=self._edge_qctx)
+            cache = dict(cache, **{k: cache[k].at[:, slots].set(small[k])
+                                   for k in ("k", "v")})
+        # Eq.(1), per batch row: each request gets its own thresholds, so
+        # one request's range never depends on its neighbours' activations
+        # — or on its own bucket padding (pad positions are clamped to a
+        # real activation before the min/max reduction; the padded tail
+        # never crosses the wire, see Transport.account_blob)
+        ranged = jnp.where(jnp.arange(s)[None, :, None] <
+                           plens[:, None, None], h, h[:, :1])
+        blob, qp = self._quant_boundary(h, ranged)
+        return blob, qp, cache
+
+    def _cloud_prefill_body(self, blocks, tail, blob, qp, cache, slots,
+                            bt_rows, plens):
+        """Shared suffix prefill: returns the merged cache and the
+        last-prompt-position logits the first token comes from."""
+        cfg = self.cfg
+        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
+        n = h.shape[0]
+        if self.cloud_paged:
+            group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
+            x, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=group, cache_index=jnp.int32(0),
+                                     block_tables=bt_rows,
+                                     calibrate_kv=self.cloud_int8,
+                                     kv_lengths=plens)
+            cache = _paged_prefill_merge(cache, group, slots)
+        else:
+            small = TF.init_cache(cfg, n, self.max_len, layers=self.n_cloud)
+            x, small = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                     cache=small, cache_index=jnp.int32(0))
+            cache = {k: cache[k].at[:, slots].set(small[k]) for k in cache}
+        logits = TF.lm_head(tail, x[jnp.arange(n), plens - 1][:, None])[:, 0]
+        return cache, logits
+
+    def _cloud_prefill_impl(self, blocks, tail, blob, qp, cache, slots,
+                            bt_rows, cur, pos, plens):
+        cache, logits = self._cloud_prefill_body(blocks, tail, blob, qp,
+                                                 cache, slots, bt_rows, plens)
+        cur = cur.at[slots].set(jnp.argmax(logits, -1).astype(jnp.int32))
+        pos = pos.at[slots].set(plens)
+        return cache, cur, pos
+
+    def _cloud_prefill_sample_impl(self, blocks, tail, blob, qp, cache,
+                                   slots, bt_rows, cur, pos, plens, temps,
+                                   top_ps, seeds):
+        """Sampled prefill: the first token (absolute output index 0) is
+        a ``CLOUD``-stream draw from the filtered distribution; greedy
+        rows in the group keep the argmax.  ``temps``/``top_ps``/
+        ``seeds`` are group-row vectors aligned with ``slots``."""
+        cache, logits = self._cloud_prefill_body(blocks, tail, blob, qp,
+                                                 cache, slots, bt_rows, plens)
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+        p = S.filtered_probs(logits.astype(jnp.float32), temps, top_ps)
+        draw = S.sample_rows(p, S.token_keys(seeds, jnp.zeros_like(seeds),
+                                             S.CLOUD))
+        cur = cur.at[slots].set(jnp.where(temps > 0.0, draw, greedy))
+        pos = pos.at[slots].set(plens)
+        return cache, cur, pos
+
+    def _edge_decode_impl(self, blocks, embed, cur, cache, pos, bt):
+        self.trace_counts["decode"] += 1
+        cfg = self.cfg
+        x = ML.embed(embed, cur[:, None]).astype(cfg.dtype)
+        h, cache = TF.run_blocks(blocks, x, cfg, rope=self._rope(),
+                                 cache=cache, cache_index=pos,
+                                 qctx=self._edge_qctx, block_tables=bt)
+        # Eq.(1) per row: stale activations in idle/freed slots must not
+        # set the quant range of live requests' deltas
+        blob, qp = self._quant_boundary(h)
+        return blob, qp, cache                             # [B, 1, D] delta
+
+    def _cloud_decode_impl(self, blocks, tail, blob, qp, cache, pos, bt):
+        cfg = self.cfg
+        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
+        x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                 cache=cache, cache_index=pos,
+                                 block_tables=bt)
+        logits = TF.lm_head(tail, x)[:, 0]
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)
+
+    def _cloud_decode_sample_impl(self, blocks, tail, blob, qp, cache, pos,
+                                  bt, temps, top_ps, seeds, offsets):
+        """Sampled serial (k=1) decode: the committed token at absolute
+        output index ``offsets[b]`` is a ``CLOUD``-stream draw — the
+        reference distribution the speculative verify must match."""
+        cfg = self.cfg
+        h = dequantize(blob, qp).astype(cfg.dtype)         # Eq.(2)
+        x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                 cache=cache, cache_index=pos,
+                                 block_tables=bt)
+        logits = TF.lm_head(tail, x)[:, 0]
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+        p = S.filtered_probs(logits.astype(jnp.float32), temps, top_ps)
+        draw = S.sample_rows(p, S.token_keys(seeds, offsets, S.CLOUD))
+        nxt = jnp.where(temps > 0.0, draw, greedy)
+        return nxt, cache, jnp.minimum(pos + 1, self.max_len - 1)

@@ -186,16 +186,21 @@ class AdaptivePolicy:
         self.history: List[Decision] = []
 
     def decide(self, telemetry: LinkTelemetry, *, cut: int,
-               spec_k: int) -> Decision:
+               spec_k: int, sampled_frac: float = 0.0) -> Decision:
         """One control-loop evaluation: current telemetry → the (cut, k)
         the engine should be running, with hysteresis against the
-        config it is running."""
+        config it is running.  ``sampled_frac`` (live slots decoding at
+        temperature>0) prices the q-row uplink sampled rounds ship, and
+        the measured acceptance EWMA already reflects stochastic
+        rejection — together they pull hot sampling traffic toward a
+        smaller k than greedy traffic on the same link."""
         channel = telemetry.channel(self.fallback_channel)
         acc = telemetry.acceptance(self.acceptance_prior)
         cuts = self.cuts if self.cuts is not None else (cut,)
         best, grid = tune_cut_and_k(
             self.cfg, batch=self.batch, channel=channel, cuts=cuts,
-            acceptance=acc, edge=self.edge, cloud=self.cloud, ks=self.ks)
+            acceptance=acc, edge=self.edge, cloud=self.cloud, ks=self.ks,
+            sampled_frac=sampled_frac)
         cur = [p for p in grid if p.cut == cut and p.k == spec_k]
         cur_s = cur[0].s_per_token if cur else float("inf")
 

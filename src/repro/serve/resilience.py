@@ -207,7 +207,26 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
         # edge-only rounds are serial regardless of spec_k
         return 1 if (self.cloud_down or self.spec_k == 1) else self.spec_k
 
-    def _admit(self, toks, plens, max_news, slots, cur, pos):
+    def _edge_step(self, cur, pos, bt, slots):
+        """One local step of the hot standby — sampled slots draw their
+        token from the ``CLOUD`` stream on the draft suffix's filtered
+        distribution (``serve.spec``), so a lossless edge-only stream is
+        bitwise the cloud's serial sampled stream."""
+        if (self._samp_t[slots] > 0).any():
+            temps, top_ps, seeds = self._samp_vecs()
+            fn = self._samp_jit("edge_only_step",
+                                self._edge_only_step_sample_impl,
+                                donate=(5, 6))
+            return fn(self.edge_blocks, self.draft_blocks, self.embed,
+                      self.tail, cur, self._edge_cache, self._draft_cache,
+                      pos, bt, temps, top_ps, seeds, self._offsets())
+        return self._edge_only_step(self.edge_blocks, self.draft_blocks,
+                                    self.embed, self.tail, cur,
+                                    self._edge_cache, self._draft_cache,
+                                    pos, bt)
+
+    def _admit(self, toks, plens, max_news, slots, cur, pos, samplings=None):
+        self._note_samplings(slots, samplings)
         bt_rows = self._pool.admit(slots, plens,
                                    self._admit_reserve(max_news),
                                    toks.shape[1])
@@ -220,9 +239,21 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
                 self.transport.account_blob(
                     self.stats, blob, phase="prefill",
                     row_elems=plens.astype(np.int64) * self.cfg.d_model)
-                self._cloud_cache, cur, pos = self._cloud_prefill(
-                    self.cloud_blocks, self.tail, blob, qp,
-                    self._cloud_cache, slots_j, bt_rows, cur, pos, plens_j)
+                if (self._samp_t[slots] > 0).any():
+                    fn = self._samp_jit("cloud_prefill",
+                                        self._cloud_prefill_sample_impl,
+                                        donate=(4,), mesh=self.mesh)
+                    self._cloud_cache, cur, pos = fn(
+                        self.cloud_blocks, self.tail, blob, qp,
+                        self._cloud_cache, slots_j, bt_rows, cur, pos,
+                        plens_j, jnp.asarray(self._samp_t[slots]),
+                        jnp.asarray(self._samp_p[slots]),
+                        jnp.asarray(self._samp_s[slots]))
+                else:
+                    self._cloud_cache, cur, pos = self._cloud_prefill(
+                        self.cloud_blocks, self.tail, blob, qp,
+                        self._cloud_cache, slots_j, bt_rows, cur, pos,
+                        plens_j)
                 # the standby drafts regardless of the current spec_k
                 self._draft_cache = self._draft_prefill(
                     self.draft_blocks, blob, qp, self._draft_cache, slots_j,
@@ -240,9 +271,20 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
             except CloudUnreachable:
                 self._enter_outage(pos)
         # cloud down: the draft suffix serves the admission alone
-        self._draft_cache, cur, pos = self._edge_only_admit(
-            self.draft_blocks, self.tail, blob, qp, self._draft_cache,
-            slots_j, bt_rows, plens_j, cur, pos)
+        if (self._samp_t[slots] > 0).any():
+            fn = self._samp_jit("edge_only_admit",
+                                self._edge_only_prefill_sample_impl,
+                                donate=(4,))
+            self._draft_cache, cur, pos = fn(
+                self.draft_blocks, self.tail, blob, qp, self._draft_cache,
+                slots_j, bt_rows, plens_j, cur, pos,
+                jnp.asarray(self._samp_t[slots]),
+                jnp.asarray(self._samp_p[slots]),
+                jnp.asarray(self._samp_s[slots]))
+        else:
+            self._draft_cache, cur, pos = self._edge_only_admit(
+                self.draft_blocks, self.tail, blob, qp, self._draft_cache,
+                slots_j, bt_rows, plens_j, cur, pos)
         rows = np.asarray(dequantize(blob, qp), np.float32)
         for i, s in enumerate(slots):
             self._replay[int(s)] = [0, [rows[i, :int(plens[i])]]]
@@ -260,21 +302,28 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
     def _serial_round(self, cur, pos, slots):
         n_active = len(slots)
         bt = self._pool.table_dev()
+        sampled = bool((self._samp_t[slots] > 0).any())
         # the edge half also advances the draft suffix — the hot standby
         blob, qp, hq, nxt, self._edge_cache, self._draft_cache, pos_e = \
-            self._edge_only_step(self.edge_blocks, self.draft_blocks,
-                                 self.embed, self.tail, cur,
-                                 self._edge_cache, self._draft_cache, pos,
-                                 bt)
+            self._edge_step(cur, pos, bt, slots)
         try:
             self.transport.account_blob(self.stats, blob, phase="decode",
                                         rows=n_active)
         except CloudUnreachable:
             self._enter_outage(pos)
             return self._commit_local(nxt, pos_e, hq, slots)
-        cur, self._cloud_cache, pos = self._cloud_decode(
-            self.cloud_blocks, self.tail, blob, qp, self._cloud_cache, pos,
-            bt)
+        if sampled:
+            temps, top_ps, seeds = self._samp_vecs()
+            fn = self._samp_jit("cloud_decode",
+                                self._cloud_decode_sample_impl,
+                                donate=(4,), mesh=self.mesh)
+            cur, self._cloud_cache, pos = fn(
+                self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
+                pos, bt, temps, top_ps, seeds, self._offsets())
+        else:
+            cur, self._cloud_cache, pos = self._cloud_decode(
+                self.cloud_blocks, self.tail, blob, qp, self._cloud_cache,
+                pos, bt)
         try:
             self.transport.account_downlink(self.stats, n_active)
         except CloudUnreachable:
@@ -284,21 +333,38 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
     def _spec_round(self, cur, pos, slots):
         k, n_active = self.spec_k, len(slots)
         bt = self._pool.table_dev()
-        draft_fn, verify_fn = self._spec_fns(k)
-        blobs, scales, zps, drafts, self._edge_cache, self._draft_cache = \
-            draft_fn(self.edge_blocks, self.draft_blocks, self.embed,
-                     self.tail, cur, self._edge_cache, self._draft_cache,
-                     pos, bt)
+        sampled = bool((self._samp_t[slots] > 0).any())
+        if sampled:
+            temps, top_ps, seeds = self._samp_vecs()
+            offs = self._offsets()
+            draft_fn, verify_fn = self._spec_sample_fns(k)
+            (blobs, scales, zps, drafts, qs, self._edge_cache,
+             self._draft_cache) = draft_fn(
+                self.edge_blocks, self.draft_blocks, self.embed, self.tail,
+                cur, self._edge_cache, self._draft_cache, pos, bt, temps,
+                top_ps, seeds, offs)
+        else:
+            draft_fn, verify_fn = self._spec_fns(k)
+            (blobs, scales, zps, drafts, self._edge_cache,
+             self._draft_cache) = draft_fn(
+                self.edge_blocks, self.draft_blocks, self.embed, self.tail,
+                cur, self._edge_cache, self._draft_cache, pos, bt)
+        n_samp = int((self._samp_t[slots] > 0).sum())
         try:
             self.transport.charge(
                 self.stats,
                 n_active * (k * (self.cfg.d_model * blobs.dtype.itemsize
                                  + _QP_BYTES)
-                            + (k - 1) * _TOK_BYTES) + _MSG_BYTES,
+                            + (k - 1) * _TOK_BYTES) + _MSG_BYTES
+                + n_samp * (k - 1) * self.cfg.vocab * 4,
                 phase="decode")
         except CloudUnreachable:
             # the round's drafts are computed and locally consistent —
-            # commit all k instead of wasting the round
+            # commit all k instead of wasting the round.  Sampled rows
+            # commit their DRAFT-stream draws: in the lossless mode the
+            # draft distribution *is* the cloud distribution, so the
+            # committed tokens stay distributionally exact (the stream
+            # itself is the documented chunking caveat, serve.sampling)
             self._enter_outage(pos)
             h = (np.asarray(blobs, np.float32)
                  - np.asarray(zps, np.float32)[..., None]) \
@@ -309,9 +375,14 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
             counts = np.full((self.max_batch,), k, np.int64)
             return drafts[-1], jnp.minimum(pos + k, self.max_len - 1), \
                 jnp.transpose(drafts), counts
-        toks, n_commit, cur, self._cloud_cache, pos = verify_fn(
-            self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
-            self._cloud_cache, pos, bt)
+        if sampled:
+            toks, n_commit, cur, self._cloud_cache, pos = verify_fn(
+                self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
+                qs, self._cloud_cache, pos, bt, temps, top_ps, seeds, offs)
+        else:
+            toks, n_commit, cur, self._cloud_cache, pos = verify_fn(
+                self.cloud_blocks, self.tail, blobs, scales, zps, drafts,
+                self._cloud_cache, pos, bt)
         counts = np.asarray(n_commit)
         try:
             self.transport.account_downlink(self.stats, n_active, k=k)
@@ -327,10 +398,7 @@ class ResilientCollaborativeEngine(CollaborativeServingEngine):
     def _edge_only_round(self, cur, pos, slots):
         bt = self._pool.table_dev()
         _, _, hq, nxt, self._edge_cache, self._draft_cache, pos = \
-            self._edge_only_step(self.edge_blocks, self.draft_blocks,
-                                 self.embed, self.tail, cur,
-                                 self._edge_cache, self._draft_cache, pos,
-                                 bt)
+            self._edge_step(cur, pos, bt, slots)
         return self._commit_local(nxt, pos, hq, slots)
 
     def _commit_local(self, nxt, pos, hq, slots):

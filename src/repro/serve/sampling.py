@@ -1,0 +1,176 @@
+"""Temperature / top-p sampling for the serving engines, including the
+speculative **rejection-sampling verify** (the standard speculative
+sampling scheme) that keeps the cloud model's output distribution exact
+while the edge drafts.
+
+Distribution contract
+---------------------
+
+For a request with ``SamplingParams(temperature=T > 0, top_p=P,
+seed=s)``, every committed token is distributed exactly as if the cloud
+suffix had sampled it serially from ``nucleus(softmax(logits / T), P)``
+— the draft only proposes.  Grading position i accepts draft ``d ~ q``
+with probability ``min(1, p(d) / q(d))`` and, on the first rejection,
+resamples from the normalized residual ``max(p - q, 0)``; if every
+graded draft is accepted the bonus token at the round's last position
+is sampled directly from ``p``.  Both identities hold per committed
+prefix, so the accepted stream is *distributionally* indistinguishable
+from non-speculative cloud sampling (gated by a TV-distance frequency
+test in ``tests/test_sampled_spec.py``).  ``temperature=0`` (or
+``sampling=None``) is the greedy fast path — it routes through the
+pre-existing argmax phases untouched, bit for bit.
+
+Seed discipline (replay determinism)
+------------------------------------
+
+Every random draw uses a key derived **only** from the request's
+``(seed, absolute output index, stream tag)`` — never from slot ids,
+batch composition, or wall clock:
+
+    ``DRAFT``   the edge's proposal at an output index;
+    ``ACCEPT``  the verify's accept/reject uniform for that index;
+    ``RESID``   the residual resample on rejection;
+    ``CLOUD``   direct cloud draws — the prefill's first token, serial
+                (k=1) steps, the all-accepted bonus token, and the
+                resilient engine's edge-only fallback (which in
+                lossless mode therefore reproduces the cloud's serial
+                stream bitwise).
+
+Consequences: preemption replay, fleet co-batching, and outage resync
+cannot perturb a request's stream (same indices → same keys), and
+re-drafting a previously rejected index reuses its ``DRAFT`` key safely
+— the discarded draw never influenced any committed token, so the redraw
+is still an independent sample from the *new* conditional ``q``.  What
+is **not** pinned across configurations is round chunking: a ``k=4``
+stream consumes ``ACCEPT``/``RESID`` draws where a ``k=1`` stream
+consumes ``CLOUD`` draws, so different (cut, k) schedules agree in
+distribution (and at output index 0 bitwise), not token-for-token.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingParams", "DRAFT", "ACCEPT", "RESID", "CLOUD",
+           "token_keys", "uniform_rows", "filtered_probs", "sample_rows",
+           "grade_and_correct"]
+
+# stream tags (see module docstring) — folded into every per-token key
+DRAFT, ACCEPT, RESID, CLOUD = 0, 1, 2, 3
+
+# log-floor for zeroed (out-of-nucleus) probabilities: low enough that
+# categorical's Gumbel noise (bounded by ~17 for 32-bit uniforms) can
+# never resurrect a masked token, finite so no NaNs flow through where()
+_LOG_FLOOR = 1e-38
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode-sampling controls.
+
+    ``temperature=0`` means greedy (argmax) — such requests take the
+    bit-identical pre-sampling fast path regardless of ``top_p``/
+    ``seed``.  ``seed`` is the root of every random draw the request
+    ever consumes (see the module docstring's stream discipline)."""
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.temperature >= 0.0, self.temperature
+        assert 0.0 < self.top_p <= 1.0, self.top_p
+
+    @property
+    def sampled(self) -> bool:
+        return self.temperature > 0.0
+
+
+def token_keys(seeds: jax.Array, indices: jax.Array,
+               stream: int) -> jax.Array:
+    """[n, 2] uint32 PRNG keys for (seed, absolute output index, stream)
+    triples — the whole replay-determinism story is that keys depend on
+    nothing else."""
+    def one(s, i):
+        k = jax.random.PRNGKey(s)
+        return jax.random.fold_in(jax.random.fold_in(k, i), stream)
+    return jax.vmap(one)(seeds.astype(jnp.uint32), indices.astype(jnp.int32))
+
+
+def uniform_rows(keys: jax.Array) -> jax.Array:
+    """One U[0, 1) draw per key row."""
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+
+def filtered_probs(logits: jax.Array, temps: jax.Array,
+                   top_ps: jax.Array) -> jax.Array:
+    """Row-wise temperature + top-p (nucleus) filtered probabilities.
+
+    ``logits [n, V]`` f32, ``temps``/``top_ps`` ``[n]``.  Nucleus keeps
+    the smallest prefix of descending-sorted probabilities whose
+    *exclusive* cumulative mass is below ``top_p`` (ties at the
+    threshold all kept), then renormalizes.  Rows with ``temp <= 0``
+    return a one-hot at the argmax, so downstream categorical draws on
+    greedy rows are deterministic — though engines never sample greedy
+    rows; they take the argmax branch directly."""
+    t = jnp.maximum(temps, 1e-6)[:, None]
+    p = jax.nn.softmax(logits / t, axis=-1)
+    sp = jnp.sort(p, axis=-1)[:, ::-1]
+    cs = jnp.cumsum(sp, axis=-1)
+    keep_sorted = (cs - sp) < top_ps[:, None]
+    thresh = jnp.min(jnp.where(keep_sorted, sp, jnp.inf), axis=-1)
+    p = jnp.where(p >= thresh[:, None], p, 0.0)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1],
+                            dtype=p.dtype)
+    return jnp.where((temps > 0.0)[:, None], p, onehot)
+
+
+def sample_rows(p: jax.Array, keys: jax.Array) -> jax.Array:
+    """One categorical draw per probability row (``p [n, V]``)."""
+    logp = jnp.log(jnp.maximum(p, _LOG_FLOOR))
+    return jax.vmap(lambda lp, k: jax.random.categorical(k, lp))(
+        logp, keys).astype(jnp.int32)
+
+
+def grade_and_correct(p: jax.Array, q: jax.Array, d: jax.Array,
+                      sampled_row: jax.Array, greedy_t: jax.Array,
+                      seeds: jax.Array, offsets: jax.Array,
+                      ) -> tuple:
+    """The rejection-sampling verify core, row-mixed with greedy.
+
+    ``p``/``q`` are the cloud/draft filtered probabilities ``[B, k, V]``
+    at each drafted position, ``d [B, k]`` the drafts, ``greedy_t`` the
+    cloud argmaxes, ``offsets [B]`` each row's absolute output index of
+    position 0.  Greedy rows (``~sampled_row``) grade by exact argmax
+    match and correct with ``greedy_t`` — committing the identical
+    tokens the greedy verify would.  Sampled rows accept position i iff
+    ``u_i * q_i(d_i) <= p_i(d_i)`` (``u`` from the ``ACCEPT`` stream);
+    the correction at the first rejection samples the normalized
+    residual ``max(p - q, 0)`` (``RESID``; a numerically-empty residual
+    — q covering p — falls back to ``p``), and an all-accepted round's
+    bonus position samples ``p`` directly (``CLOUD``).  Returns
+    ``(tokens [B, k], n_commit [B])`` with positions ``>= n_commit``
+    unread by the scheduler."""
+    B, k, V = p.shape
+    ar = jnp.arange(k)[None, :]
+    idx = (offsets[:, None] + ar).reshape(-1)            # [B*k] abs indices
+    rep_seeds = jnp.repeat(seeds, k)
+    u = uniform_rows(token_keys(rep_seeds, idx, ACCEPT)).reshape(B, k)
+    p_d = jnp.take_along_axis(p, d[..., None], axis=-1)[..., 0]
+    q_d = jnp.take_along_axis(q, d[..., None], axis=-1)[..., 0]
+    ok_row = jnp.where(sampled_row[:, None], u * q_d <= p_d, d == greedy_t)
+    ok = ok_row[:, :k - 1].astype(jnp.int32)
+    n_commit = 1 + jnp.sum(jnp.cumprod(ok, axis=1), axis=1)  # [B] in 1..k
+    resid = jnp.maximum(p - q, 0.0)
+    mass = jnp.sum(resid, axis=-1, keepdims=True)
+    resid = jnp.where(mass > 1e-9, resid / jnp.maximum(mass, 1e-9), p)
+    resid_tok = sample_rows(resid.reshape(B * k, V),
+                            token_keys(rep_seeds, idx, RESID)).reshape(B, k)
+    bonus_tok = sample_rows(p.reshape(B * k, V),
+                            token_keys(rep_seeds, idx, CLOUD)).reshape(B, k)
+    corr = jnp.where(ar == k - 1, bonus_tok, resid_tok)
+    corr = jnp.where(sampled_row[:, None], corr, greedy_t)
+    toks = jnp.where(ar == (n_commit - 1)[:, None], corr, d)
+    return toks, n_commit

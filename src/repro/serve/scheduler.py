@@ -76,6 +76,8 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # None or temperature=0 → bit-identical greedy (serve.sampling)
+    sampling: Optional["SamplingParams"] = None  # noqa: F821
     # -- overload-robust serving (all optional; defaults = legacy batch) --
     priority: int = 0             # higher admits first / preempts last
     deadline_s: Optional[float] = None   # absolute, on the simulated clock
@@ -149,7 +151,7 @@ class _SlotEngine:
     # -- subclass interface -------------------------------------------------
     def _admit(self, toks: jax.Array, plens: np.ndarray, max_news: np.ndarray,
                slots: np.ndarray, cur: jax.Array, pos: jax.Array,
-               ) -> Tuple[jax.Array, jax.Array]:
+               samplings=None) -> Tuple[jax.Array, jax.Array]:
         raise NotImplementedError
 
     def _decode_all(self, cur: jax.Array, pos: jax.Array,
@@ -297,12 +299,16 @@ class _SlotEngine:
                                 else max(0, len(r._parked) - 1))
 
     # -- scheduler ----------------------------------------------------------
-    def generate(self, prompts: List[np.ndarray], *,
-                 max_new_tokens: int = 16) -> List[List[int]]:
-        """Greedy-decode a list of prompts with continuous batching."""
+    def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 16,
+                 sampling=None) -> List[List[int]]:
+        """Decode a list of prompts with continuous batching.  ``sampling``
+        is one ``SamplingParams`` for all prompts, or a per-prompt list;
+        ``None`` (default) is greedy."""
+        samps = (list(sampling) if isinstance(sampling, (list, tuple))
+                 else [sampling] * len(prompts))
         reqs = [Request(uid=i, prompt=np.asarray(p),
-                        max_new_tokens=max_new_tokens)
-                for i, p in enumerate(prompts)]
+                        max_new_tokens=max_new_tokens, sampling=s)
+                for i, (p, s) in enumerate(zip(prompts, samps))]
         if reqs:
             self._run(reqs)
         return [r.out_tokens for r in reqs]
@@ -438,7 +444,9 @@ class _SlotEngine:
                 cur, pos = self._timed(
                     "prefill_s",
                     lambda: self._admit(toks_j, plens, max_news, slots_a,
-                                        cur, pos))
+                                        cur, pos,
+                                        samplings=[r.sampling
+                                                   for r in group]))
                 self.stats.prefill_calls += 1
                 self.stats.prefill_tokens += int(plens.sum())
                 resumes = [(s, r) for r, s in zip(group, slots)

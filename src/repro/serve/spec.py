@@ -32,6 +32,14 @@ k is a trace constant (scan length / verify q-block width), so each k a
 policy may pick gets its own jitted pair, built on first use and cached
 — an online ``spec_k`` switch after warm-up never recompiles.
 
+Rounds carrying a temperature>0 slot run the ``*_sample`` twins (their
+own per-k jit cache): the draft proposes seeded categorical draws from
+its filtered distribution ``q`` and ships the graded positions' ``q``
+rows alongside the blob (priced as extra uplink), and the verify grades
+by **rejection sampling** (``serve.sampling.grade_and_correct``) instead
+of argmax match — keeping the cloud's sampling distribution exact while
+greedy rows in the same batch still commit bit-identical argmax tokens.
+
 The mixin also hosts the **degradation** phases of the resilient engine
 (``serve.resilience``), which reuse the same draft machinery with the
 verify removed: when the cloud is unreachable, the edge's INT8 suffix
@@ -55,6 +63,7 @@ import numpy as np
 from repro.core.quant import dequantize
 from repro.models import layers as ML
 from repro.models import transformer as TF
+from repro.serve import sampling as S
 from repro.serve.kvcache import _paged_prefill_merge, _paged_prefill_view
 from repro.serve.scheduler import _bucket_len, _jit_phase
 
@@ -78,6 +87,22 @@ class _SpecDraftMixin:
                                 mesh=getattr(self, "mesh", None))
             self._spec_jits[k] = (draft, verify)
         return self._spec_jits[k]
+
+    def _spec_sample_fns(self, k: int):
+        """Sampled twin of ``_spec_fns``: per-k cached jitted
+        (draft, rejection-sampling verify) pair for rounds carrying at
+        least one temperature>0 slot.  Greedy rows ride along on the
+        argmax branch inside the same call (``serve.sampling``)."""
+        if not hasattr(self, "_spec_sample_jits"):
+            self._spec_sample_jits: Dict[int, Tuple[Any, Any]] = {}
+        if k not in self._spec_sample_jits:
+            draft = _jit_phase(partial(self._spec_draft_sample_impl, k),
+                               donate=(5, 6))
+            verify = _jit_phase(partial(self._verify_sample_impl, k),
+                                donate=(7,),
+                                mesh=getattr(self, "mesh", None))
+            self._spec_sample_jits[k] = (draft, verify)
+        return self._spec_sample_jits[k]
 
     def _draft_prefill_impl(self, blocks, blob, qp, cache, slots, bt_rows,
                             plens):
@@ -139,6 +164,46 @@ class _SpecDraftMixin:
             jax.lax.scan(step, (cur, pos, e_cache, d_cache), None,
                          length=k)
         return blobs, scales, zps, drafts, e_cache, d_cache
+
+    def _spec_draft_sample_impl(self, k, edge_blocks, draft_blocks, embed,
+                                tail, cur, e_cache, d_cache, pos, bt, temps,
+                                top_ps, seeds, offsets):
+        """Sampled draft scan: step i proposes a ``DRAFT``-stream draw
+        from the local suffix's filtered distribution ``q`` at absolute
+        output index ``offsets + i`` (greedy rows keep the argmax, on
+        the same raw logits tensor so their tokens stay bit-identical).
+        Also emits the stacked ``[k, B, V]`` f32 ``q`` rows the verify
+        grades against — an extra uplink the engine prices per graded
+        position (``costmodel.speculative_round_time(draft_q_bytes)``).
+        """
+        self.trace_counts["spec_draft"] += 1
+        cfg = self.cfg
+        rope = self._rope()
+
+        def step(carry, i):
+            tok, p, ec, dc = carry
+            x = ML.embed(embed, tok[:, None]).astype(cfg.dtype)
+            h, ec = TF.run_blocks(edge_blocks, x, cfg, rope=rope, cache=ec,
+                                  cache_index=p, qctx=self._edge_qctx,
+                                  block_tables=bt)
+            blob, qp = self._quant_boundary(h)              # per row
+            hq = dequantize(blob, qp).astype(cfg.dtype)  # what the cloud sees
+            y, dc = TF.run_blocks(draft_blocks, hq, cfg, rope=rope, cache=dc,
+                                  cache_index=p, qctx=self._edge_qctx,
+                                  block_tables=bt)
+            logits = TF.lm_head(tail, y)[:, 0]
+            greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+            q = S.filtered_probs(logits.astype(jnp.float32), temps, top_ps)
+            draw = S.sample_rows(q, S.token_keys(seeds, offsets + i,
+                                                 S.DRAFT))
+            nxt = jnp.where(temps > 0.0, draw, greedy)
+            p = jnp.minimum(p + 1, self.max_len - 1)
+            return (nxt, p, ec, dc), (blob[:, 0], qp.scale, qp.zero_point,
+                                      nxt, q)
+
+        (_, _, e_cache, d_cache), (blobs, scales, zps, drafts, qs) = \
+            jax.lax.scan(step, (cur, pos, e_cache, d_cache), jnp.arange(k))
+        return blobs, scales, zps, drafts, qs, e_cache, d_cache
 
     def _draft_rebuild_impl(self, edge_blocks, draft_blocks, embed, toks,
                             d_cache, slots, bt_rows, plens):
@@ -258,6 +323,61 @@ class _SpecDraftMixin:
         pos = pos.at[slots].set(plens)
         return cache, cur, pos
 
+    def _edge_only_step_sample_impl(self, edge_blocks, draft_blocks, embed,
+                                    tail, cur, e_cache, d_cache, pos, bt,
+                                    temps, top_ps, seeds, offsets):
+        """Sampled edge-only step: the committed token is a ``CLOUD``-
+        stream draw from the draft suffix's filtered distribution — the
+        *same* key the cloud's serial step would consume at this output
+        index, so in the lossless mode (identical suffix logits) the
+        degraded stream reproduces the cloud's sampled stream bitwise,
+        and a post-resync replay can never fork it."""
+        self.trace_counts["edge_only"] += 1
+        cfg = self.cfg
+        rope = self._rope()
+        x = ML.embed(embed, cur[:, None]).astype(cfg.dtype)
+        h, e_cache = TF.run_blocks(edge_blocks, x, cfg, rope=rope,
+                                   cache=e_cache, cache_index=pos,
+                                   qctx=self._edge_qctx, block_tables=bt)
+        blob, qp = self._quant_boundary(h)
+        hq = dequantize(blob, qp)                 # Eq.(2): the cloud's view
+        y, d_cache = TF.run_blocks(draft_blocks, hq.astype(cfg.dtype), cfg,
+                                   rope=rope, cache=d_cache, cache_index=pos,
+                                   qctx=self._edge_qctx, block_tables=bt)
+        logits = TF.lm_head(tail, y)[:, 0]
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+        p = S.filtered_probs(logits.astype(jnp.float32), temps, top_ps)
+        draw = S.sample_rows(p, S.token_keys(seeds, offsets, S.CLOUD))
+        nxt = jnp.where(temps > 0.0, draw, greedy)
+        new_pos = jnp.minimum(pos + 1, self.max_len - 1)
+        return blob, qp, hq[:, 0].astype(jnp.float32), nxt, e_cache, \
+            d_cache, new_pos
+
+    def _edge_only_prefill_sample_impl(self, blocks, tail, blob, qp, cache,
+                                       slots, bt_rows, plens, cur, pos,
+                                       temps, top_ps, seeds):
+        """Sampled twin of ``_edge_only_prefill_impl``: the first token
+        (absolute output index 0) is the same ``CLOUD``-stream draw the
+        cloud's own sampled prefill would commit."""
+        cfg = self.cfg
+        h = dequantize(blob, qp).astype(cfg.dtype)
+        n = h.shape[0]
+        group = _paged_prefill_view(cache, self.n_cloud, n, cfg.n_kv)
+        y, group = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                 cache=group, cache_index=jnp.int32(0),
+                                 qctx=self._edge_qctx, block_tables=bt_rows,
+                                 calibrate_kv=self.edge_int8,
+                                 kv_lengths=plens)
+        cache = _paged_prefill_merge(cache, group, slots)
+        logits = TF.lm_head(tail, y[jnp.arange(n), plens - 1][:, None])[:, 0]
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+        p = S.filtered_probs(logits.astype(jnp.float32), temps, top_ps)
+        draw = S.sample_rows(p, S.token_keys(seeds, jnp.zeros_like(seeds),
+                                             S.CLOUD))
+        cur = cur.at[slots].set(jnp.where(temps > 0.0, draw, greedy))
+        pos = pos.at[slots].set(plens)
+        return cache, cur, pos
+
     def _resync_replay_impl(self, blocks, h, cache, pos, bt):
         """Rebuild the cloud suffix KV for slots that were live before
         the outage: one multi-token cached step over the ``[B, R, D]``
@@ -318,3 +438,36 @@ class _SpecDraftMixin:
                                       axis=1)[:, 0]
         new_pos = jnp.minimum(pos + n_commit, self.max_len - 1)
         return t, n_commit, new_cur, cache, new_pos
+
+    def _verify_sample_impl(self, k, blocks, tail, blobs, scales, zps,
+                            drafts, qs, cache, pos, bt, temps, top_ps, seeds,
+                            offsets):
+        """Rejection-sampling verify: the same batched multi-token cloud
+        step as ``_verify_impl``, graded by ``sampling.grade_and_correct``
+        — sampled rows accept draft i with prob ``min(1, p_i(d)/q_i(d))``
+        and correct from the normalized residual (bonus draw from ``p``
+        if all graded drafts survive), greedy rows grade by argmax match
+        and commit the identical tokens the greedy verify would.  The
+        committed stream is distributionally exact vs serial cloud
+        sampling (see ``serve.sampling``)."""
+        self.trace_counts["verify"] += 1
+        cfg = self.cfg
+        h = (blobs.astype(jnp.float32) - zps[..., None]) * scales[..., None]
+        h = h.transpose(1, 0, 2).astype(cfg.dtype)              # [B, k, D]
+        x, cache = TF.run_blocks(blocks, h, cfg, rope=self._rope(),
+                                 cache=cache, cache_index=pos,
+                                 block_tables=bt)
+        logits = TF.lm_head(tail, x)                            # [B, k, V]
+        t = jnp.argmax(logits, -1).astype(jnp.int32)            # [B, k]
+        d = drafts.T                                            # [B, k]
+        B, _, V = logits.shape
+        p = S.filtered_probs(logits.astype(jnp.float32).reshape(B * k, V),
+                             jnp.repeat(temps, k),
+                             jnp.repeat(top_ps, k)).reshape(B, k, V)
+        q = qs.transpose(1, 0, 2)                               # [B, k, V]
+        toks, n_commit = S.grade_and_correct(p, q, d, temps > 0.0, t,
+                                             seeds, offsets)
+        new_cur = jnp.take_along_axis(toks, (n_commit - 1)[:, None],
+                                      axis=1)[:, 0]
+        new_pos = jnp.minimum(pos + n_commit, self.max_len - 1)
+        return toks, n_commit, new_cur, cache, new_pos

@@ -1,0 +1,393 @@
+"""Per-tenant building blocks of the fleet engine (``serve.fleet``):
+the tenant spec + runtime state, the per-cut serving runtime (jitted
+split-cache phases + caches shared by every tenant at that cut), and
+the cross-tenant fair admission half of the scheduler
+(``_FleetAdmitMixin``).  Split out of ``fleet.py`` so each serving
+module stays within the size budget ``tests/test_adaptive_serve.py``
+pins; ``fleet`` re-exports the public names."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as TF
+from repro.serve.phases import _SplitPhases
+from repro.serve.policy import AdaptivePolicy
+from repro.serve.scheduler import (Request, _bucket_len, _jit_phase,
+                                   _remove_is, _SlotEngine)
+from repro.serve.spec import _SpecDraftMixin
+from repro.serve.transport import ServeStats, Transport
+
+__all__ = ["TenantSpec", "_Tenant", "_CutRuntime", "_FleetAdmitMixin"]
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One edge of the fleet: its link, its partition, its share.
+
+    ``policy="auto"`` gives the tenant its own ``AdaptivePolicy`` over
+    its own telemetry (candidate cuts default to the engine grid
+    {0, mid, last-1} ∪ {cut_layer}); switches apply at the tenant's
+    drained boundary.  ``weight`` is the tenant's share under
+    ``FleetFairness``; ``max_pages`` is an optional hard KV page quota
+    (None = uncapped — fairness then comes from admission ordering and
+    over-share-first preemption alone)."""
+    name: str
+    channel: Any = None
+    cut_layer: int = 0
+    spec_k: int = 1
+    weight: float = 1.0
+    max_pages: Optional[int] = None
+    policy: Union[AdaptivePolicy, str, None] = None
+
+
+class _Tenant:
+    """Runtime state of one edge: transport (channel + telemetry),
+    stats, current (cut, spec_k), pending re-tune decision."""
+
+    def __init__(self, spec: TenantSpec, policy: Optional[AdaptivePolicy]):
+        self.name = spec.name
+        self.spec = spec
+        self.transport = Transport(spec.channel)
+        self.stats = ServeStats()
+        self.cut = spec.cut_layer
+        self.spec_k = spec.spec_k
+        self.policy = policy
+        self.pending = None          # Decision awaiting a drained boundary
+        self.hold = False            # pause this tenant's admission
+
+    @property
+    def telemetry(self):
+        return self.transport.telemetry
+
+    def now(self) -> float:
+        return float(getattr(self.transport.channel, "clock_s", 0.0))
+
+    def wait(self, seconds: float) -> bool:
+        s = float(seconds)
+        if s <= 0:
+            return True
+        w = getattr(self.transport.channel, "wait", None)
+        if w is None:
+            return False             # clockless channel
+        w(s)
+        self.stats.stall_wait_s += s
+        return True
+
+
+class _CutRuntime(_SpecDraftMixin, _SplitPhases):
+    """Per-cut serving runtime: the jitted split-cache phases plus the
+    edge/cloud/draft caches for one cut, shared by *every* tenant served
+    at that cut.  Weights come out of the fleet's shared ``_CutBank``
+    (pointer swap — building a runtime never requantizes); the caches
+    index the fleet's single ``_PagedPool``, so all cuts see identical
+    page geometry and one slot's pages mean the same thing in every
+    runtime (writes from slots outside a phase call's group are masked
+    to the dump page via ``table_for``)."""
+
+    def __init__(self, fleet, cut: int):
+        cfg = fleet.cfg
+        self.cfg = cfg
+        self.max_len = fleet.max_len
+        self.max_batch = fleet.max_batch
+        self.page_size = fleet.page_size
+        self.a_bits = fleet.a_bits
+        self.edge_paged = self.cloud_paged = True
+        self.edge_int8 = fleet.edge_int8
+        self.cloud_int8 = fleet.cloud_int8
+        self._edge_qctx = fleet._edge_qctx
+        self.trace_counts = fleet.trace_counts
+        self.mesh = None
+        self.cut = cut
+        self.n_edge = cut + 1
+        self.n_cloud = cfg.n_layers - self.n_edge
+        self.edge_blocks, self.cloud_blocks, self.draft_blocks = \
+            fleet._bank.get(cut)
+        n_pool = fleet._pool.allocator.num_pages
+        self._edge_cache = TF.init_cache(
+            cfg, fleet.max_batch, fleet.max_len, layers=self.n_edge,
+            paged=True, quantized=self.edge_int8,
+            page_size=fleet.page_size, num_pages=n_pool)
+        self._cloud_cache = TF.init_cache(
+            cfg, fleet.max_batch, fleet.max_len, layers=self.n_cloud,
+            paged=True, quantized=self.cloud_int8,
+            page_size=fleet.page_size, num_pages=n_pool)
+        self._spec_max = fleet._spec_max
+        self._edge_prefill = _jit_phase(self._edge_prefill_impl, donate=(3,))
+        self._cloud_prefill = _jit_phase(self._cloud_prefill_impl,
+                                         donate=(4,))
+        self._edge_decode = _jit_phase(self._edge_decode_impl, donate=(3,))
+        self._cloud_decode = _jit_phase(self._cloud_decode_merge_impl,
+                                        donate=(4,))
+        self._samp_jits: Dict[str, Any] = {}
+        if self._spec_max > 1:
+            self._draft_cache = TF.init_cache(
+                cfg, fleet.max_batch, fleet.max_len, layers=self.n_cloud,
+                paged=True, quantized=self.edge_int8,
+                page_size=fleet.page_size, num_pages=n_pool)
+            self._draft_prefill = _jit_phase(self._draft_prefill_impl,
+                                             donate=(3,))
+            self._spec_jits: Dict[int, Tuple[Any, Any]] = {}
+            self._fleet_jits: Dict[int, Tuple[Any, Any]] = {}
+            self._fleet_sample_jits: Dict[int, Tuple[Any, Any]] = {}
+
+    def _samp_jit(self, name: str, impl, donate=()):
+        """Lazy per-runtime jit cache for the sampled phase variants —
+        all-greedy fleets never trace them."""
+        if name not in self._samp_jits:
+            self._samp_jits[name] = _jit_phase(impl, donate=donate)
+        return self._samp_jits[name]
+
+    # Fleet variants of the round phases: the group-masked merge of the
+    # round's cur/pos back into the fleet's global arrays happens INSIDE
+    # the jitted phase (one dispatch per round), not as follow-up eager
+    # gathers/scatters — those recompile per group size and on a small
+    # model cost more than the round's own compute.
+    def _cloud_decode_merge_impl(self, blocks, tail, blob, qp, cache, pos,
+                                 bt, cur, gmask):
+        nxt, cache, npos = self._cloud_decode_impl(blocks, tail, blob, qp,
+                                                   cache, pos, bt)
+        return (jnp.where(gmask, nxt, cur), cache,
+                jnp.where(gmask, npos, pos))
+
+    def _cloud_decode_sample_merge_impl(self, blocks, tail, blob, qp, cache,
+                                        pos, bt, temps, top_ps, seeds,
+                                        offsets, cur, gmask):
+        nxt, cache, npos = self._cloud_decode_sample_impl(
+            blocks, tail, blob, qp, cache, pos, bt, temps, top_ps, seeds,
+            offsets)
+        return (jnp.where(gmask, nxt, cur), cache,
+                jnp.where(gmask, npos, pos))
+
+    def _verify_merge_impl(self, k, blocks, tail, blobs, scales, zps,
+                           drafts, cache, pos, bt, cur, gmask):
+        t, n_commit, ncur, cache, npos = self._verify_impl(
+            k, blocks, tail, blobs, scales, zps, drafts, cache, pos, bt)
+        return (t, n_commit, jnp.where(gmask, ncur, cur), cache,
+                jnp.where(gmask, npos, pos))
+
+    def _verify_sample_merge_impl(self, k, blocks, tail, blobs, scales, zps,
+                                  drafts, qs, cache, pos, bt, temps, top_ps,
+                                  seeds, offsets, cur, gmask):
+        t, n_commit, ncur, cache, npos = self._verify_sample_impl(
+            k, blocks, tail, blobs, scales, zps, drafts, qs, cache, pos, bt,
+            temps, top_ps, seeds, offsets)
+        return (t, n_commit, jnp.where(gmask, ncur, cur), cache,
+                jnp.where(gmask, npos, pos))
+
+    def _fleet_spec_fns(self, k: int):
+        if k not in self._fleet_jits:
+            draft = _jit_phase(partial(self._spec_draft_impl, k),
+                               donate=(5, 6))
+            verify = _jit_phase(partial(self._verify_merge_impl, k),
+                                donate=(6,))
+            self._fleet_jits[k] = (draft, verify)
+        return self._fleet_jits[k]
+
+    def _fleet_spec_sample_fns(self, k: int):
+        """Sampled twin of ``_fleet_spec_fns`` — used whenever a (cut,
+        k) group carries at least one temperature>0 slot; greedy rows in
+        the group stay on the argmax branch, bit for bit."""
+        if k not in self._fleet_sample_jits:
+            draft = _jit_phase(partial(self._spec_draft_sample_impl, k),
+                               donate=(5, 6))
+            verify = _jit_phase(partial(self._verify_sample_merge_impl, k),
+                                donate=(7,))
+            self._fleet_sample_jits[k] = (draft, verify)
+        return self._fleet_sample_jits[k]
+
+
+class _FleetAdmitMixin:
+    """The admission half of ``FleetServingEngine`` plus its per-slot
+    sampling-state plumbing (host mirrors of each slot's
+    ``SamplingParams``, refreshed at admission — the same discipline as
+    ``CollaborativeServingEngine``'s)."""
+
+    def _note_samplings(self, slots, samplings) -> None:
+        for i, s in enumerate(slots):
+            sp = None if samplings is None else samplings[i]
+            sp = sp if (sp is not None and sp.sampled) else None
+            self._samp_t[s] = sp.temperature if sp else 0.0
+            self._samp_p[s] = sp.top_p if sp else 1.0
+            self._samp_s[s] = sp.seed if sp else 0
+        self._samp_dev = None
+
+    def _samp_vecs(self):
+        if self._samp_dev is None:
+            self._samp_dev = (jnp.asarray(self._samp_t),
+                              jnp.asarray(self._samp_p),
+                              jnp.asarray(self._samp_s))
+        return self._samp_dev
+
+    def _offsets(self):
+        """[max_batch] absolute output index each live slot's next round
+        starts at — key discipline identical to the solo engine's, which
+        is why a tenant's sampled stream survives fleet co-batching
+        bitwise."""
+        off = np.zeros((self.max_batch,), np.int32)
+        for s, (_r, c) in (self._sched_active or {}).items():
+            off[s] = c
+        return jnp.asarray(off)
+
+    def _reserve(self, max_news: np.ndarray) -> np.ndarray:
+        head = self._spec_max - 1
+        if self.demand_paged:
+            return np.minimum(max_news + head, self._spec_max)
+        return max_news + head
+
+    def _quota_blocked(self, tenant: str, pending: int, needed: int) -> bool:
+        q = self.fairness.quotas.get(tenant)
+        return q is not None and \
+            self._pool.owner_pages(tenant) + pending + needed > q
+
+    def _admit_turn(self, queue, active, free, cur, pos, rounds):
+        """One admission turn: fair-ordered eligible requests grouped by
+        (cut, bucket) into batched prefill calls over the shared slot
+        table.  Returns (admitted_any, cur, pos, first_blocked_request).
+        A quota-blocked request is skipped — its tenant waits without
+        blocking the others (and never seeds a group); a pool-wide
+        shortfall ends the turn (retirements must return pages first)."""
+        admitted = False
+        stalled: Optional[Request] = None
+        while free:
+            elig = [r for r in queue
+                    if not self._tenants[r.tenant].hold
+                    and r.arrival_s <= self._tenants[r.tenant].now() + 1e-12]
+            elig.sort(key=self.fairness.admission_key)
+            group: List[Request] = []
+            rows: List[np.ndarray] = []
+            slots: List[int] = []
+            shapes: List[Tuple[int, int]] = []
+            pending_pages: Dict[str, int] = {}
+            gcut = gbucket = None
+            pool_short = False
+            for r in elig:
+                if not free:
+                    break
+                t = self._tenants[r.tenant]
+                bucket = _bucket_len(_SlotEngine._eff_plen(self, r),
+                                     self.max_len)
+                if gcut is not None and (t.cut, bucket) != (gcut, gbucket):
+                    continue
+                row = _SlotEngine._eff_prompt(r)
+                eff_new = (r.max_new_tokens if r._parked is None
+                           else r.max_new_tokens - len(r._parked) + 1)
+                assert (len(row) + eff_new + self._spec_max - 1) \
+                    <= self.max_len, \
+                    "prompt + generation (+ draft headroom) exceeds max_len"
+                needed = self._pool.pages_needed(
+                    len(row), int(self._reserve(np.int64(eff_new))),
+                    bucket)
+                if self._quota_blocked(r.tenant,
+                                       pending_pages.get(r.tenant, 0),
+                                       needed):
+                    stalled = stalled or r
+                    continue
+                if sum(self._pool.pages_needed(
+                        p, int(self._reserve(np.int64(m))), bucket)
+                        for p, m in shapes) + needed \
+                        > self._pool.free_pages():
+                    stalled = stalled or r
+                    pool_short = True
+                    break
+                if gcut is None:
+                    gcut, gbucket = t.cut, bucket
+                pending_pages[r.tenant] = \
+                    pending_pages.get(r.tenant, 0) + needed
+                shapes.append((len(row), eff_new))
+                group.append(r)
+                rows.append(row)
+                slots.append(free.pop(0))
+            if not group:
+                break
+            for r in group:
+                _remove_is(queue, r)
+            cur, pos = self._admit_group(group, rows, slots, shapes,
+                                         gcut, gbucket, cur, pos, rounds,
+                                         active)
+            admitted = True
+            if pool_short:
+                break
+        return admitted, cur, pos, stalled
+
+    def _admit_group(self, group, rows, slots, shapes, cut, bucket, cur,
+                     pos, rounds, active):
+        """Batched prefill of one (cut, bucket) admission group — rows
+        may span tenants; each tenant's wire is charged separately."""
+        runtime = self._runtime(cut)
+        self._note_samplings(slots, [r.sampling for r in group])
+        toks = np.zeros((len(group), bucket), np.int32)
+        for i, row in enumerate(rows):
+            toks[i, :len(row)] = row
+        plens = np.asarray([len(row) for row in rows], np.int32)
+        reserves = self._reserve(
+            np.asarray([m for _, m in shapes], np.int64))
+        # pool admission per tenant-run (owner tagging), one table read
+        i = 0
+        while i < len(group):
+            j = i
+            while j < len(group) and group[j].tenant == group[i].tenant:
+                j += 1
+            self._pool.admit(slots[i:j], plens[i:j], reserves[i:j], bucket,
+                             owner=group[i].tenant)
+            i = j
+        bt_rows = self._pool.rows(np.asarray(slots, np.int32), bucket)
+        slots_j = jnp.asarray(np.asarray(slots, np.int32))
+        plens_j = jnp.asarray(plens)
+        blob, qp, runtime._edge_cache = runtime._edge_prefill(
+            runtime.edge_blocks, self.embed, jnp.asarray(toks),
+            runtime._edge_cache, slots_j, bt_rows, plens_j)
+        if (self._samp_t[slots] > 0).any():
+            fn = runtime._samp_jit("cloud_prefill",
+                                   runtime._cloud_prefill_sample_impl,
+                                   donate=(4,))
+            runtime._cloud_cache, cur, pos = fn(
+                runtime.cloud_blocks, self.tail, blob, qp,
+                runtime._cloud_cache, slots_j, bt_rows, cur, pos, plens_j,
+                jnp.asarray(self._samp_t[slots]),
+                jnp.asarray(self._samp_p[slots]),
+                jnp.asarray(self._samp_s[slots]))
+        else:
+            runtime._cloud_cache, cur, pos = runtime._cloud_prefill(
+                runtime.cloud_blocks, self.tail, blob, qp,
+                runtime._cloud_cache, slots_j, bt_rows, cur, pos, plens_j)
+        drafting = any(self._tenants[r.tenant].spec_k > 1 for r in group)
+        if self._spec_max > 1 and drafting:
+            runtime._draft_cache = runtime._draft_prefill(
+                runtime.draft_blocks, blob, qp, runtime._draft_cache,
+                slots_j, bt_rows, plens_j)
+        # per-tenant wire accounting over the group's rows
+        for name in {r.tenant for r in group}:
+            t = self._tenants[name]
+            idx = [i for i, r in enumerate(group) if r.tenant == name]
+            t.transport.account_blob(
+                t.stats, blob, phase="prefill",
+                row_elems=plens[idx].astype(np.int64) * self.cfg.d_model)
+            t.transport.account_downlink(t.stats, len(idx),
+                                         phase="prefill")
+            t.stats.prefill_calls += 1
+            t.stats.prefill_tokens += int(plens[idx].sum())
+        # resumed requests: pin the stream to the parked tokens
+        resumes = [(s, r) for r, s in zip(group, slots)
+                   if r._parked is not None]
+        if resumes:
+            rs = jnp.asarray([s for s, _ in resumes], jnp.int32)
+            lasts = jnp.asarray([int(r._parked[-1]) for _, r in resumes],
+                                jnp.int32)
+            cur = cur.at[rs].set(lasts)
+        fresh = [(r, s, 1) for r, s in zip(group, slots)
+                 if r._parked is None]
+        if fresh:
+            rounds.append((cur[:, None], fresh))
+        for r, s in zip(group, slots):
+            t = self._tenants[r.tenant]
+            active[s] = (r, 1 if r._parked is None else len(r._parked))
+            if r.admit_s is None:
+                r.admit_s = t.now()
+            t.stats.queue_wait_s += max(0.0, t.now() - r._enq_s)
+            r._parked = None
+        return cur, pos

@@ -23,7 +23,8 @@ from repro.core.costmodel import (CLOUD_TITANXP_CLASS, EDGE_TX2_CLASS,
 from repro.models.transformer import LMConfig, init_lm
 from repro.serve.engine import (AdaptivePolicy, CollaborativeServingEngine,
                                 Decision, DriftingChannel, LinkTelemetry,
-                                _MSG_BYTES, _QP_BYTES, _TOK_BYTES)
+                                SamplingParams, _MSG_BYTES, _QP_BYTES,
+                                _TOK_BYTES)
 from repro.serve.policy import _CutBank
 
 jax.config.update("jax_platform_name", "cpu")
@@ -288,6 +289,52 @@ def test_spec_k_auto_self_corrects_between_requests(params):
     assert eng.spec_k == spec_k_for_lm(
         CFG, 1, batch=2, channel=ch,
         acceptance=eng.telemetry.acceptance(), ks=eng.policy.ks)[0].k > 1
+
+
+def test_stochastic_acceptance_drives_k_retune_without_recompile(params):
+    """Sampled (temperature>0) traffic grades drafts by rejection
+    sampling, so the telemetry's acceptance EWMA measures the
+    *stochastic* accept rate.  When it collapses, the between-requests
+    re-tune steps spec_k down to exactly what ``tune_spec_k`` prices at
+    the measured rate; when it recovers, switching back to an
+    already-exercised k re-uses every compiled phase — zero new
+    traces."""
+    ch = Channel.from_kbps(100, rtt_ms=50)
+    eng = CollaborativeServingEngine(params, CFG, cut_layer=1, max_batch=2,
+                                     max_len=64, page_size=PAGE,
+                                     spec_k="auto", channel=ch)
+    k0 = eng.spec_k
+    assert k0 > 1
+    sp = SamplingParams(temperature=1.5, seed=3)
+    eng.generate(_prompts((6, 7)), max_new_tokens=10, sampling=sp)
+    # rejection grading feeds the same EWMA the greedy verify does (on
+    # this tiny model the int8 drafter tracks the fp suffix so closely
+    # that the measured stochastic rate stays ~1 — the collapse below is
+    # injected, modelling a drafter that diverges on real traffic)
+    assert eng.telemetry.n_rounds > 0       # stochastic grading observed
+    # all-rejected rounds are first-class samples (see
+    # transport.observe_round): a run of them drives the EWMA to 0 and
+    # the drained tick re-tunes to the measured rate
+    for _ in range(80):
+        eng.telemetry.observe_round(10, 0)
+    assert eng.telemetry.acceptance() < 0.01
+    eng._policy_tick(0)
+    want = spec_k_for_lm(CFG, 1, batch=2, channel=ch,
+                         acceptance=eng.telemetry.acceptance(),
+                         ks=eng.policy.ks)[0].k
+    assert eng.spec_k == want == 1
+    assert eng.stats.spec_k_switches == 1
+    eng.generate(_prompts((6, 7), seed=1), max_new_tokens=6, sampling=sp)
+    # recovery: retune lands on some k > 1; warm it once, then a repeat
+    # workload at the same (k, shapes) must not trace anything new
+    for _ in range(80):
+        eng.telemetry.observe_round(10, 10)
+    eng._policy_tick(0)
+    assert eng.spec_k > 1
+    eng.generate(_prompts((6, 7), seed=2), max_new_tokens=10, sampling=sp)
+    snap = dict(eng.trace_counts)
+    eng.generate(_prompts((6, 7), seed=4), max_new_tokens=10, sampling=sp)
+    assert eng.trace_counts == snap
 
 
 def test_tune_spec_k_uplink_includes_framing():

@@ -1,0 +1,364 @@
+"""Sampling-aware speculative verify (rejection sampling).
+
+Gates the PR's distribution contract (``serve.sampling``): (a) the
+rejection-sampling verify core commits tokens distributed *exactly* as
+the cloud's filtered distribution — a TV-distance frequency test at the
+math level, and an engine-level frequency test comparing spec_k=4
+against non-speculative (spec_k=1) cloud sampling; (b) the greedy
+``temperature=0`` fast path is bit-identical to the pre-sampling
+engines and never traces the sampled phases; (c) the per-(seed, index,
+stream) key discipline makes sampled streams deterministic across
+fresh engines, preemption replay, and fleet co-batching; (d) the wire
+and the cost model both price the sampled rounds' f32 q-row uplink;
+(e) ``LinkTelemetry.observe_round`` treats a zero-acceptance round as
+a first-class sample (routine at high temperature) — pinned here
+because ``tune_spec_k`` re-tunes from that EWMA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import lm_round_args, tune_spec_k
+from repro.core.costmodel import (CLOUD_TITANXP_CLASS, EDGE_TX2_CLASS,
+                                  Channel, speculative_round_time)
+from repro.models.transformer import LMConfig, init_lm
+from repro.serve import (CollaborativeServingEngine, FaultyChannel,
+                         FleetServingEngine, PressureSchedule,
+                         ReliableTransport, ResilientCollaborativeEngine,
+                         SamplingParams, TenantSpec)
+from repro.serve import sampling as S
+from repro.serve.transport import (_MSG_BYTES, _QP_BYTES, _TOK_BYTES,
+                                   LinkTelemetry)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = LMConfig(name="sampled-tiny", n_layers=3, d_model=32, n_heads=4,
+               n_kv=2, d_ff=64, vocab=64, max_seq=64, remat=False)
+PAGE = 8
+# bitwise oracles need the lossless fp configuration (same convention as
+# tests/test_fleet_serve.py): no INT8 rounding anywhere on the path
+LOSSLESS = dict(a_bits=None, edge_int8=False, cloud_int8=False)
+BASE_CH = Channel.from_kbps(500, rtt_ms=10)
+SP = SamplingParams(temperature=0.8, top_p=0.9, seed=11)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, CFG.vocab, l).astype(np.int32) for l in lens]
+
+
+def _engine(params, k, *, max_batch=4, **kw):
+    cfg = dict(LOSSLESS)
+    cfg.update(kw)
+    return CollaborativeServingEngine(params, CFG, cut_layer=1,
+                                      max_batch=max_batch, max_len=64,
+                                      page_size=PAGE, spec_k=k, **cfg)
+
+
+def _tv(counts_a, counts_b):
+    pa = counts_a / counts_a.sum()
+    pb = counts_b / counts_b.sum()
+    return 0.5 * float(np.abs(pa - pb).sum())
+
+
+# ---------------------------------------------------------------------------
+# The rejection-sampling core is exact (math-level TV gate)
+# ---------------------------------------------------------------------------
+
+
+def test_grade_and_correct_matches_target_distribution():
+    """Committed tokens are distributed per the CLOUD filtered
+    distribution p regardless of the draft distribution q — both the
+    graded position (accept-or-residual) and the all-accepted bonus."""
+    B, k, V = 4096, 2, 8
+    rng = np.random.RandomState(3)
+    p1 = jax.nn.softmax(jnp.asarray(rng.randn(V) * 1.5))
+    q1 = jax.nn.softmax(jnp.asarray(rng.randn(V) * 1.5))
+    p = jnp.tile(p1[None, None, :], (B, k, 1))
+    q = jnp.tile(q1[None, None, :], (B, k, 1))
+    seeds = jnp.arange(B, dtype=jnp.int32)
+    offs = jnp.zeros((B,), jnp.int32)
+    d0 = S.sample_rows(jnp.tile(q1[None, :], (B, 1)),
+                       S.token_keys(seeds, offs, S.DRAFT))
+    d = jnp.stack([d0, jnp.zeros_like(d0)], axis=1)
+    toks, n_commit = S.grade_and_correct(
+        p, q, d, jnp.ones((B,), bool), jnp.zeros((B, k), jnp.int32),
+        seeds, offs)
+    toks, n_commit = np.asarray(toks), np.asarray(n_commit)
+    target = np.asarray(p1)
+    # graded position: empirical frequency vs p
+    freq0 = np.bincount(toks[:, 0], minlength=V).astype(float)
+    assert 0.5 * np.abs(freq0 / B - target).sum() < 0.05
+    # acceptance rate matches sum(min(p, q)) — the textbook rate
+    want_acc = float(np.minimum(target, np.asarray(q1)).sum())
+    assert abs((n_commit - 1).mean() - want_acc) < 0.05
+    # bonus position (rows whose graded draft was accepted): also ~ p
+    bonus = toks[n_commit == 2, 1]
+    freq1 = np.bincount(bonus, minlength=V).astype(float)
+    assert 0.5 * np.abs(freq1 / len(bonus) - target).sum() < 0.08
+    # deterministic: the same inputs reproduce bitwise
+    toks2, n2 = S.grade_and_correct(
+        p, q, d, jnp.ones((B,), bool), jnp.zeros((B, k), jnp.int32),
+        seeds, offs)
+    assert np.array_equal(toks, np.asarray(toks2))
+    assert np.array_equal(n_commit, np.asarray(n2))
+
+
+def test_grade_and_correct_accepts_everything_when_q_equals_p():
+    """q == p makes the accept probability min(1, p/q) = 1 — every round
+    commits its full k (and the empty-residual fallback never has to
+    invent mass)."""
+    B, k, V = 256, 4, 8
+    p1 = jax.nn.softmax(jnp.asarray(np.random.RandomState(0).randn(V)))
+    p = jnp.tile(p1[None, None, :], (B, k, 1))
+    seeds = jnp.arange(B, dtype=jnp.int32)
+    offs = jnp.zeros((B,), jnp.int32)
+    idx = jnp.repeat(seeds, k)
+    pos = jnp.tile(jnp.arange(k), (B,))
+    d = S.sample_rows(p.reshape(B * k, V),
+                      S.token_keys(idx, pos, S.DRAFT)).reshape(B, k)
+    _, n_commit = S.grade_and_correct(
+        p, p, d, jnp.ones((B,), bool), jnp.zeros((B, k), jnp.int32),
+        seeds, offs)
+    assert int(np.asarray(n_commit).min()) == k
+
+
+def test_filtered_probs_nucleus_and_greedy_rows():
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0]] * 3)
+    temps = jnp.asarray([1.0, 1.0, 0.0])
+    top_ps = jnp.asarray([1.0, 0.6, 0.5])
+    p = np.asarray(S.filtered_probs(logits, temps, top_ps))
+    full = np.exp([0, 1, 2, 3]) / np.exp([0, 1, 2, 3]).sum()
+    assert np.allclose(p[0], full, atol=1e-6)          # top_p=1: softmax
+    assert p[1][3] > 0 and p[1][0] == p[1][1] == 0     # nucleus drops tail
+    assert np.isclose(p[1].sum(), 1.0, atol=1e-6)      # renormalized
+    assert np.array_equal(p[2], [0, 0, 0, 1])          # greedy row: onehot
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: statistical equivalence + greedy regression
+# ---------------------------------------------------------------------------
+
+
+def _streams(eng, n_calls=4, batch=8, max_new=8):
+    """n_calls * batch independent sampled streams of one prompt, with
+    disjoint seeds per stream."""
+    prompt = _prompts([6], seed=2)[0]
+    out = []
+    for c in range(n_calls):
+        samps = [SamplingParams(temperature=0.9, top_p=0.95,
+                                seed=c * batch + i) for i in range(batch)]
+        out += eng.generate([prompt] * batch, max_new_tokens=max_new,
+                            sampling=samps)
+    return out
+
+
+@pytest.fixture(scope="module")
+def sampled_streams(params):
+    e4 = _engine(params, 4, max_batch=8)
+    e1 = _engine(params, 1, max_batch=8)
+    return _streams(e4), _streams(e1)
+
+
+def test_spec_sampling_matches_serial_distribution(sampled_streams):
+    """The statistical-equivalence gate: spec_k=4 rejection-sampling
+    streams and non-speculative (k=1) cloud-sampling streams of the
+    same prompt/temperature are draws from the same process.  Output
+    index 0 is bitwise (both sides draw it from the CLOUD stream);
+    later indices are pooled into an empirical marginal whose TV
+    distance must be small — and far smaller than the distance to the
+    greedy point mass (the power check)."""
+    s4, s1 = sampled_streams
+    assert [s[0] for s in s4] == [s[0] for s in s1]    # index 0: bitwise
+    pool4 = np.bincount(np.concatenate([s[1:] for s in s4]),
+                        minlength=CFG.vocab).astype(float)
+    pool1 = np.bincount(np.concatenate([s[1:] for s in s1]),
+                        minlength=CFG.vocab).astype(float)
+    tv = _tv(pool4, pool1)
+    assert tv < 0.30, tv
+    # power: the same statistic separates sampling from greedy decode
+    greedy = np.zeros(CFG.vocab)
+    greedy[np.argmax(pool1)] = pool1.sum()
+    assert _tv(pool4, greedy) > 0.45
+
+
+def test_sampled_streams_deterministic_and_seed_sensitive(params):
+    e_a = _engine(params, 4)
+    e_b = _engine(params, 4)
+    prompts = _prompts((6, 9), seed=4)
+    got_a = e_a.generate(prompts, max_new_tokens=8, sampling=SP)
+    got_b = e_b.generate(prompts, max_new_tokens=8, sampling=SP)
+    assert got_a == got_b                      # fresh engine, same seeds
+    other = e_b.generate(prompts, max_new_tokens=8,
+                         sampling=SamplingParams(temperature=0.8,
+                                                 top_p=0.9, seed=12))
+    assert other != got_a                      # seed moves the stream
+
+
+def test_temperature0_is_bitwise_greedy_and_never_traces_sampling(params):
+    """The regression gate: ``sampling=None``, ``temperature=0``, and
+    the pre-PR call signature all commit the identical stream, and
+    greedy traffic never builds (traces) any sampled phase."""
+    prompts = _prompts((7, 9, 8), seed=5)
+    eng = _engine(params, 4)
+    pre = eng.generate(prompts, max_new_tokens=6)
+    none = eng.generate(prompts, max_new_tokens=6, sampling=None)
+    t0 = eng.generate(prompts, max_new_tokens=6,
+                      sampling=SamplingParams(temperature=0.0, seed=99))
+    assert pre == none == t0
+    assert not eng._samp_jits
+    assert not getattr(eng, "_spec_sample_jits", {})
+
+
+def test_mixed_batch_greedy_rows_stay_bitwise(params):
+    """Greedy requests co-batched with sampled ones ride the sampled
+    phases' argmax branch — in lossless mode their streams must equal
+    the all-greedy run bit for bit."""
+    prompts = _prompts((7, 9, 8, 6), seed=6)
+    eng = _engine(params, 4)
+    ref = eng.generate(prompts, max_new_tokens=6)
+    mixed = eng.generate(
+        prompts, max_new_tokens=6,
+        sampling=[None, SP, SamplingParams(temperature=0.0), SP])
+    assert mixed[0] == ref[0] and mixed[2] == ref[2]
+    assert mixed[1] != ref[1]                  # the sampled rows did sample
+
+
+# ---------------------------------------------------------------------------
+# Replay determinism: preemption, fleet co-batching, chaos
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_replay_keeps_sampled_stream_bit_identical(params):
+    """Preempt-and-resume replays the committed prefix and re-enters the
+    round loop at the same absolute output index — the (seed, index,
+    stream) keys make the resumed sampled stream bitwise equal to the
+    never-preempted run."""
+    prompts = _prompts((6, 7, 9), seed=7)
+    ref = CollaborativeServingEngine(params, CFG, cut_layer=1, spec_k=4,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     page_size=PAGE, max_batch=4,
+                                     max_len=64, **LOSSLESS)
+    want = ref.generate(prompts, max_new_tokens=10, sampling=SP)
+    dut = CollaborativeServingEngine(params, CFG, cut_layer=1, spec_k=4,
+                                     channel=FaultyChannel(BASE_CH, seed=0),
+                                     page_size=PAGE, max_batch=4,
+                                     max_len=64, demand_paged=True,
+                                     pressure=PressureSchedule(
+                                         [(0.02, 0.3, 1)]), **LOSSLESS)
+    got = dut.generate(prompts, max_new_tokens=10, sampling=SP)
+    assert dut.stats.preemptions >= 1
+    assert got == want
+
+
+def test_fleet_cobatching_keeps_sampled_stream_bit_identical(params):
+    """A sampled tenant's fleet stream equals the same requests served
+    alone — co-batched greedy neighbours, shared pool, and group-masked
+    rounds never perturb the per-request key streams."""
+    prompts = _prompts((6, 9), seed=8)
+    solo = _engine(params, 4)
+    want = solo.generate(prompts, max_new_tokens=8, sampling=SP)
+    fleet = FleetServingEngine(
+        params, CFG, [TenantSpec("a", cut_layer=1, spec_k=4),
+                      TenantSpec("b", cut_layer=1, spec_k=4)],
+        max_batch=4, max_len=64, page_size=PAGE, **LOSSLESS)
+    got = fleet.generate({"a": prompts, "b": _prompts([7], seed=9)},
+                         max_new_tokens=8, sampling={"a": SP, "b": None})
+    assert got["a"] == want
+
+
+def test_chaos_outage_sampled_run_completes_and_degrades(params):
+    """Under corruption + a cloud outage, sampled serving degrades to
+    edge-only (drafter suffix, CLOUD-stream draws), resyncs, and still
+    fills every budget — the stochastic twin of the INT8 chaos test."""
+    fch = FaultyChannel(BASE_CH, seed=9, corrupt_p=0.2,
+                        outages=[(0.05, 0.35)])
+    eng = ResilientCollaborativeEngine(
+        params, CFG, cut_layer=1, spec_k=2, channel=fch,
+        transport=ReliableTransport(fch, max_retries=1,
+                                    fallback_deadline_s=0.1),
+        page_size=PAGE, max_batch=2, max_len=64)
+    out = eng.generate(_prompts((9, 7, 8), seed=8), max_new_tokens=16,
+                       sampling=SP)
+    assert all(len(o) == 16 for o in out)
+    assert eng.stats.edge_only_tokens > 0
+    # it came back at least once (the q-heavier sampled wire shifts the
+    # fault clock, so the *final* link state is timing-dependent)
+    assert eng.stats.resyncs >= 1
+
+
+# ---------------------------------------------------------------------------
+# Wire + cost model price the q-row uplink consistently
+# ---------------------------------------------------------------------------
+
+
+def test_engine_charges_q_rows_on_sampled_spec_rounds(params):
+    """Every sampled spec round ships the k-1 graded positions' f32
+    draft distributions; with one live sampled slot the decode uplink is
+    exactly rounds * (k-row blob + drafts + q rows + framing)."""
+    eng = _engine(params, 4, max_batch=1)
+    eng.generate(_prompts([6], seed=10), max_new_tokens=9, sampling=SP)
+    k, D, V = 4, CFG.d_model, CFG.vocab
+    per_round = (k * (D * 4 + _QP_BYTES) + (k - 1) * _TOK_BYTES
+                 + (k - 1) * V * 4 + _MSG_BYTES)
+    assert eng.stats.spec_rounds >= 2
+    assert eng.stats.decode_bytes == eng.stats.spec_rounds * per_round
+
+
+def test_costmodel_prices_q_bytes(params):
+    """``speculative_round_time(draft_q_bytes=...)`` adds exactly
+    (k-1) * q_bytes of uplink; ``lm_round_args(sampled_frac=...)``
+    derives q_bytes from the vocab; and a pricier sampled uplink never
+    makes the tuner draft *longer*."""
+    ch = Channel.from_kbps(200, rtt_ms=20)
+    kw = dict(edge_flops=1e7, cloud_flops=5e7, draft_flops=5e7,
+              blob_bytes=128.0, edge=EDGE_TX2_CLASS,
+              cloud=CLOUD_TITANXP_CLASS, channel=ch, acceptance=0.7,
+              rows=1)
+    k = 4
+    t0 = speculative_round_time(k=k, **kw)
+    qb = CFG.vocab * 4.0
+    t1 = speculative_round_time(k=k, draft_q_bytes=qb, **kw)
+    assert t1.channel_s - t0.channel_s == pytest.approx(
+        (k - 1) * qb / ch.bandwidth_bytes_per_s, rel=1e-6)
+    assert t1.decode_s == t0.decode_s and t1.tokens == t0.tokens
+    args = lm_round_args(CFG, 1, batch=2, sampled_frac=0.5)
+    assert args["draft_q_bytes"] == pytest.approx(0.5 * 2 * CFG.vocab * 4.0)
+    best_greedy, _ = tune_spec_k(ks=(1, 2, 4, 8), **kw)
+    best_sampled, _ = tune_spec_k(ks=(1, 2, 4, 8),
+                                  draft_q_bytes=50 * qb, **kw)
+    assert best_sampled.k <= best_greedy.k
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: zero-acceptance rounds are first-class samples
+# ---------------------------------------------------------------------------
+
+
+def test_observe_round_zero_acceptance_is_a_sample():
+    """An all-rejected round (routine at high temperature) must SET the
+    acceptance estimate to 0.0, not be dropped on the floor — otherwise
+    ``tune_spec_k`` keeps drafting at the optimistic prior forever."""
+    tl = LinkTelemetry()
+    assert tl.acceptance(prior=0.8) == 0.8     # no evidence: the prior
+    tl.observe_round(4, 0)
+    assert tl.acceptance(prior=0.8) == 0.0     # first sample, not prior
+    for _ in range(20):
+        tl.observe_round(4, 0)
+    assert tl.acceptance() == 0.0              # EWMA stays pinned at 0
+
+
+def test_observe_round_skips_ungraded_and_clamps():
+    tl = LinkTelemetry()
+    tl.observe_round(0, 0)                     # k=1 round: no evidence
+    assert tl.acceptance(prior=0.8) == 0.8 and tl.n_rounds == 0
+    tl.observe_round(4, 9)                     # defensive clamp to [0, 1]
+    assert tl.acceptance() == 1.0
+    tl2 = LinkTelemetry()
+    tl2.observe_round(4, -3)
+    assert tl2.acceptance() == 0.0
